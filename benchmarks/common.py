@@ -1,0 +1,157 @@
+"""Measured virtual-time simulator shared by all TPC-W benchmarks.
+
+This container has ONE CPU core, so offered load is modeled with a virtual
+clock: arrivals are timestamped by the offered rate; compute time is the
+MEASURED wall time of each engine call; latency = virtual completion -
+virtual arrival.  SharedDB admits queued work per heartbeat (queries that
+arrive during a cycle wait for the next — paper §3.2); the baseline
+processes interactions one at a time in arrival order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.baseline import QueryAtATimeEngine
+from repro.core.executor import SharedDBEngine
+from repro.workloads import tpcw
+from repro.workloads.tpcw import WI_TIMEOUT, WorkloadGenerator
+
+DEFAULT_SCALE = dict(scale_items=1000, scale_customers=2880)
+
+
+def build_engines(rng, scale=None, jit=True):
+    scale = scale or DEFAULT_SCALE
+    plan = tpcw.build_tpcw_plan(**scale)
+    data = tpcw.generate_data(rng, **scale)
+    shared = SharedDBEngine(plan, tpcw.DEFAULT_UPDATE_SLOTS, data, jit=jit)
+    baseline = QueryAtATimeEngine(plan, data, jit=jit)
+    gen = WorkloadGenerator(rng, scale["scale_items"],
+                            scale["scale_customers"])
+    return plan, shared, baseline, gen
+
+
+def warmup(shared: SharedDBEngine, baseline: QueryAtATimeEngine,
+           gen: WorkloadGenerator):
+    """Compile the always-on plan + every baseline prepared statement."""
+    for kind in tpcw.MIXES["shopping"]:
+        it = gen.interaction(kind)
+        for name, params in it.queries:
+            shared.submit(name, params)
+            baseline.execute(name, params)
+        for upd in it.updates:
+            shared.submit_update(*upd)
+            baseline.apply_update(*upd)
+    shared.run_until_drained()
+
+
+@dataclasses.dataclass
+class SimResult:
+    offered_wips: float
+    achieved_wips: float
+    good_wips: float          # completed within the TPC-W WI timeout
+    p50_s: float
+    p99_s: float
+    cycles: int = 0
+    mean_cycle_s: float = 0.0
+
+
+def run_shared(shared: SharedDBEngine, arrivals, sim_end: float,
+               max_wall_s: float = 120.0) -> SimResult:
+    """arrivals: sorted [(t, Interaction)]. Virtual-clock measured sim."""
+    vnow, idx = 0.0, 0
+    lat_by_inter: Dict[int, List[float]] = {}
+    kinds: Dict[int, str] = {}
+    ticket_map = []
+    cycle_times = []
+    wall0 = time.time()
+    while (idx < len(arrivals) or shared.pending()) \
+            and time.time() - wall0 < max_wall_s:
+        # admit work that has arrived by now
+        while idx < len(arrivals) and arrivals[idx][0] <= vnow:
+            t_arr, inter = arrivals[idx]
+            iid = idx
+            kinds[iid] = inter.kind
+            lat_by_inter.setdefault(iid, [])
+            for name, params in inter.queries:
+                tk = shared.submit(name, params)
+                ticket_map.append((iid, t_arr, tk))
+            for upd in inter.updates:
+                shared.submit_update(*upd)
+            idx += 1
+        if not shared.pending():
+            # idle: jump to next arrival
+            if idx < len(arrivals):
+                vnow = max(vnow, arrivals[idx][0])
+                continue
+            break
+        t0 = time.time()
+        shared.run_cycle()
+        dt = time.time() - t0
+        cycle_times.append(dt)
+        vnow += dt
+        for iid, t_arr, tk in ticket_map:
+            if tk.done_time is not None and tk.result is not None \
+                    and not hasattr(tk, "_counted"):
+                tk._counted = True
+                lat_by_inter[iid].append(vnow - t_arr)
+    return _summarize(arrivals, lat_by_inter, kinds, sim_end,
+                      cycles=len(cycle_times),
+                      mean_cycle=float(np.mean(cycle_times))
+                      if cycle_times else 0.0)
+
+
+def run_baseline(baseline: QueryAtATimeEngine, arrivals, sim_end: float,
+                 max_wall_s: float = 120.0) -> SimResult:
+    vnow = 0.0
+    lat_by_inter: Dict[int, List[float]] = {}
+    kinds: Dict[int, str] = {}
+    wall0 = time.time()
+    for iid, (t_arr, inter) in enumerate(arrivals):
+        if time.time() - wall0 > max_wall_s:
+            break
+        kinds[iid] = inter.kind
+        start = max(vnow, t_arr)
+        t0 = time.time()
+        for upd in inter.updates:
+            baseline.apply_update(*upd)
+        for name, params in inter.queries:
+            baseline.execute(name, params)
+        dt = time.time() - t0
+        vnow = start + dt
+        lat_by_inter[iid] = [vnow - t_arr] * max(len(inter.queries), 1)
+    return _summarize(arrivals, lat_by_inter, kinds, sim_end)
+
+
+def _summarize(arrivals, lat_by_inter, kinds, sim_end,
+               cycles=0, mean_cycle=0.0) -> SimResult:
+    n_offered = len(arrivals)
+    done, good, lats = 0, 0, []
+    for iid, (t_arr, inter) in enumerate(arrivals):
+        ls = lat_by_inter.get(iid)
+        if not ls or len(ls) < max(len(inter.queries), 1):
+            continue
+        done += 1
+        worst = max(ls)
+        lats.append(worst)
+        if worst <= WI_TIMEOUT[kinds[iid]]:
+            good += 1
+    lats = np.array(lats) if lats else np.array([np.inf])
+    return SimResult(
+        offered_wips=n_offered / sim_end,
+        achieved_wips=done / sim_end,
+        good_wips=good / sim_end,
+        p50_s=float(np.percentile(lats, 50)),
+        p99_s=float(np.percentile(lats, 99)),
+        cycles=cycles, mean_cycle_s=mean_cycle)
+
+
+def poisson_arrivals(rng, gen: WorkloadGenerator, mix: str, rate: float,
+                     duration: float) -> Tuple[list, float]:
+    n = max(1, int(rate * duration))
+    ts = np.sort(rng.uniform(0, duration, n))
+    inters = gen.sample_mix(mix, n)
+    return list(zip(ts.tolist(), inters)), duration

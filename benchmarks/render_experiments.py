@@ -1,0 +1,75 @@
+"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun.json.  Run after the sweep:
+
+    PYTHONPATH=src python -m benchmarks.render_experiments > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(n):
+    return f"{n / 2**30:.2f}"
+
+
+def render(path="results/dryrun.json"):
+    with open(path) as f:
+        data = json.load(f)
+
+    out = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        out.append(f"\n### Mesh {mesh} "
+                   f"({'512 chips, 2 pods' if '2x' in mesh else '256 chips'})\n")
+        out.append("| arch | shape | status | GiB/dev (args+tmp) | HLO "
+                   "PFLOPs | HLO TB | coll GB/link | compute s | memory s "
+                   "| collective s | dominant | roofline frac | useful "
+                   "ratio |")
+        out.append("|---|---|---|---|---|---|---|---|---|---|---|---|---|"
+                   [:-1])
+        for key in sorted(data):
+            v = data[key]
+            if v.get("mesh") != mesh or "|" in key and len(
+                    key.split("|")) > 3:
+                continue
+            if v.get("status") == "skipped":
+                out.append(f"| {v['arch']} | {v['shape']} | skip "
+                           f"({v['reason'][:40]}…) | | | | | | | | | |")
+                continue
+            if v.get("status") != "ok":
+                out.append(f"| {v['arch']} | {v['shape']} | ERROR | | | | "
+                           f"| | | | | |")
+                continue
+            m = v["memory"]
+            gib = (m["argument_bytes_per_device"]
+                   + m["temp_bytes_per_device"]) / 2**30
+            r = v["roofline"]
+            coll_link = v["collective_bytes"] / v["n_chips"] / 1e9
+            out.append(
+                f"| {v['arch']} | {v['shape']} | ok | {gib:.2f} | "
+                f"{v['hlo_flops']/1e15:.2f} | {v['hlo_bytes']/1e12:.2f} | "
+                f"{coll_link:.2f} | {r['compute_s']:.4f} | "
+                f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                f"{r['dominant']} | {r['roofline_fraction']:.3f} | "
+                f"{v['useful_flops_ratio']:.2f} |")
+    # collective schedule summary
+    out.append("\n### Collective schedules (single-pod, counts per step)\n")
+    out.append("| arch | shape | all-gather | all-reduce | reduce-scatter "
+               "| all-to-all | permute |")
+    out.append("|---|---|---|---|---|---|---|")
+    for key in sorted(data):
+        v = data[key]
+        if v.get("status") != "ok" or v.get("mesh") != "pod16x16":
+            continue
+        c = v["collectives"]["counts"]
+        out.append(f"| {v['arch']} | {v['shape']} | "
+                   f"{c.get('all-gather', 0)} | {c.get('all-reduce', 0)} | "
+                   f"{c.get('reduce-scatter', 0)} | "
+                   f"{c.get('all-to-all', 0)} | "
+                   f"{c.get('collective-permute', 0)} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    print(render(path))

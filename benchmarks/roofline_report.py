@@ -1,0 +1,35 @@
+"""Roofline report: reads results/dryrun.json (written by the multi-pod
+dry-run) and prints the per-(arch x shape x mesh) three-term roofline table
+used in EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(path="results/dryrun.json", mesh="pod16x16"):
+    if not os.path.exists(path):
+        print(f"rooflinereport: {path} missing — run "
+              "PYTHONPATH=src python -m repro.launch.dryrun first")
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    rows = []
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
+           f"{'coll_s':>9s} {'dom':>6s} {'frac':>6s} {'useful':>7s}")
+    print(hdr)
+    for key, v in sorted(data.items()):
+        if v.get("status") != "ok" or v.get("mesh") != mesh:
+            continue
+        r = v["roofline"]
+        rows.append((v["arch"], v["shape"], r))
+        print(f"{v['arch']:22s} {v['shape']:12s} "
+              f"{r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+              f"{r['collective_s']:9.4f} {r['dominant'][:6]:>6s} "
+              f"{r['roofline_fraction']:6.3f} "
+              f"{v['useful_flops_ratio']:7.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one entry per paper figure (Figs. 7-11) plus the
+beyond-paper roofline report.  ``python -m benchmarks.run [--quick]``."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    t_start = time.time()
+
+    from benchmarks import (fig7_throughput, fig8_scaling, fig9_interactions,
+                            fig10_heavy_light, fig11_interaction,
+                            roofline_report)
+
+    print("== Fig 7: throughput vs load (3 mixes) ==", flush=True)
+    rows = fig7_throughput.run(
+        rates=(10, 60) if quick else (10, 40, 120, 250),
+        duration=6.0 if quick else 10.0,
+        mixes=("shopping",) if quick else ("browsing", "shopping",
+                                           "ordering"))
+    for mix, rate, rs, rb in rows:
+        _emit(f"fig7_{mix}_r{rate}_shared", rs.mean_cycle_s * 1e6,
+              f"good_wips={rs.good_wips:.2f};p99_s={rs.p99_s:.2f}")
+        _emit(f"fig7_{mix}_r{rate}_qaat", 0.0,
+              f"good_wips={rb.good_wips:.2f};p99_s={rb.p99_s:.2f}")
+
+    print("== Fig 8: scaling with cores (projection) ==", flush=True)
+    for k, sh, ba in fig8_scaling.run(n=24 if quick else 64):
+        _emit(f"fig8_cores{k}", 0.0,
+              f"shared_wips={sh:.1f};qaat_wips={ba:.1f}")
+
+    print("== Fig 9: individual web interactions ==", flush=True)
+    for kind, ws, wb in fig9_interactions.run(
+            n_per_kind=8 if quick else 32):
+        _emit(f"fig9_{kind}", 1e6 / max(ws, 1e-9),
+              f"shared_wips={ws:.1f};qaat_wips={wb:.1f}")
+
+    print("== Fig 10: heavy vs light batches ==", flush=True)
+    for template, n, ts, tb in fig10_heavy_light.run(
+            sizes=(1, 16, 64) if quick else (1, 4, 16, 64, 256)):
+        _emit(f"fig10_{template}_n{n}", ts / max(n, 1) * 1e6,
+              f"shared_s={ts:.3f};qaat_s={tb:.3f};"
+              f"speedup={tb / max(ts, 1e-9):.2f}")
+
+    print("== Fig 11: load interaction ==", flush=True)
+    for hr, rs, rb in fig11_interaction.run(
+            heavy_rates=(0, 20, 200) if quick else (0, 20, 80, 200, 400),
+            duration=6.0 if quick else 12.0):
+        _emit(f"fig11_heavy{hr}", rs.mean_cycle_s * 1e6,
+              f"shared_good={rs.good_wips:.2f};qaat_good={rb.good_wips:.2f}")
+
+    print("== Roofline (from dry-run artifacts) ==", flush=True)
+    for arch, shape, r in roofline_report.run():
+        _emit(f"roofline_{arch}_{shape}", r["step_time_s"] * 1e6,
+              f"dom={r['dominant']};frac={r['roofline_fraction']:.3f}")
+
+    print(f"total bench wall: {time.time() - t_start:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro — SharedDB (VLDB'12) as a production-grade JAX/TPU framework.
+
+Two pillars:
+  * ``repro.core``     — the paper's batched shared-computation query engine.
+  * ``repro.models``   — the assigned LM architectures served/trained under the
+                         SharedDB cycle discipline (``repro.serving``).
+
+See DESIGN.md for the full system inventory and hardware-adaptation notes.
+"""
+
+__version__ = "1.0.0"

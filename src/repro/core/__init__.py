@@ -1,0 +1,11 @@
+"""SharedDB core: batched shared-computation query engine (the paper).
+
+Layers:
+  dataquery   — NF2 data-query model as packed query bitmasks (TPU: VPU ops)
+  storage     — columnar tables, functional MVCC snapshots, key indexes
+  operators   — shared scan / join / sort / top-n / group-by
+  plan        — global query plan (DAG), template merging (Fig. 3)
+  executor    — heartbeat batch cycles over one jitted always-on plan
+  baseline    — query-at-a-time executor ("SystemX" stand-in)
+  sla         — bounded-computation / response-time provisioning (§3.5)
+"""

@@ -1,0 +1,89 @@
+"""The data-query model (paper §3.1), TPU-native.
+
+Every (intermediate) relation carries a *query-set* column: the set of
+active query ids interested in each tuple.  The paper implements the set as
+a linked list (NF2); dynamic lists do not vectorize, so we pack the set into
+uint32 bitmask words: ``mask[t, w]`` holds bits for queries 32w..32w+31.
+
+Set algebra becomes lane-parallel bitwise ops (VPU):
+    union        = mask_a | mask_b
+    intersection = mask_a & mask_b        <- the query_id join predicate!
+    membership   = bit test
+The intersection IS the paper's amended join predicate
+``R.query_id = S.query_id`` (§3.3): a tuple pair joins iff some query wants
+both sides.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32
+
+
+def mask_width(qcap: int) -> int:
+    assert qcap % WORD == 0, f"query capacity {qcap} not a multiple of 32"
+    return qcap // WORD
+
+
+def empty_mask(n_rows: int, qcap: int):
+    return jnp.zeros((n_rows, mask_width(qcap)), jnp.uint32)
+
+
+def full_mask(n_rows: int, qcap: int):
+    return jnp.full((n_rows, mask_width(qcap)), 0xFFFFFFFF, jnp.uint32)
+
+
+def pack(bits):
+    """bool[..., Q] -> uint32[..., Q/32]."""
+    *lead, Q = bits.shape
+    W = mask_width(Q)
+    b = bits.reshape(*lead, W, WORD).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
+    return jnp.sum(b * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack(mask, qcap: int = None):
+    """uint32[..., W] -> bool[..., W*32]."""
+    *lead, W = mask.shape
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (mask[..., None] >> shifts) & jnp.uint32(1)
+    out = bits.reshape(*lead, W * WORD).astype(bool)
+    if qcap is not None:
+        out = out[..., :qcap]
+    return out
+
+
+def union(a, b):
+    return a | b
+
+
+def intersect(a, b):
+    return a & b
+
+
+def any_query(mask):
+    """bool[T]: does any active query want this tuple?"""
+    return jnp.any(mask != 0, axis=-1)
+
+
+def popcount(mask):
+    """int32[T]: number of subscribed queries per tuple."""
+    return jnp.sum(jax.lax.population_count(mask), axis=-1).astype(jnp.int32)
+
+
+def query_bit(qid, qcap: int):
+    """uint32[W] single-query mask row (qid may be traced)."""
+    W = mask_width(qcap)
+    word = qid // WORD
+    bit = jnp.uint32(1) << jnp.uint32(qid % WORD)
+    return jnp.where(jnp.arange(W) == word, bit, jnp.uint32(0))
+
+
+def select_query(mask, qid):
+    """bool[T]: rows subscribed to query `qid` (traced ok)."""
+    word = qid // WORD
+    bit = jnp.uint32(qid % WORD)
+    w = mask[..., word] if isinstance(word, int) else \
+        jnp.take(mask, word, axis=-1)
+    return ((w >> bit) & jnp.uint32(1)).astype(bool)

@@ -1,0 +1,187 @@
+"""Heartbeat executor (paper §3.2, §4.2, Algorithm 1).
+
+While one batch of queries and updates executes, newly arriving work queues;
+at each heartbeat the queues are drained (up to the per-template slot
+capacity — excess stays queued for the next cycle, exactly the paper's
+admission rule) and pushed through ONE jitted global-plan step.
+
+Latency accounting matches §3.5: a query waits at most one cycle in the
+queue plus one cycle of processing => worst-case latency = 2 x cycle time.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import CompiledPlan, build_cycle_fn
+from repro.core.storage import UpdateSlots
+
+
+@dataclasses.dataclass
+class Ticket:
+    id: int
+    template: str
+    params: Any
+    submit_time: float
+    done_time: Optional[float] = None
+    result: Any = None
+
+    @property
+    def latency(self) -> float:
+        return (self.done_time - self.submit_time) if self.done_time else None
+
+
+class SharedDBEngine:
+    """The always-on global plan + admission queues."""
+
+    def __init__(self, plan: CompiledPlan, update_slots: UpdateSlots,
+                 initial_data: Dict[str, Dict[str, np.ndarray]],
+                 jit: bool = True):
+        self.plan = plan
+        self.update_slots = update_slots
+        self.state = plan.catalog.init_state(initial_data)
+        self._queues: Dict[str, collections.deque] = {
+            name: collections.deque() for name in plan.templates}
+        self._update_queue: collections.deque = collections.deque()
+        self._ticket_ids = itertools.count()
+        cycle = build_cycle_fn(plan, update_slots)
+        # donate storage: the snapshot rolls forward functionally in place
+        self._cycle = jax.jit(cycle, donate_argnums=(0,)) if jit else cycle
+        self.cycles_run = 0
+        self.queries_done = 0
+
+    # ------------------------------------------------------------------ API
+    def submit(self, template: str, params: Dict[str, Any]) -> Ticket:
+        """params: {pred_index: (lo, hi)} inclusive int ranges."""
+        t = Ticket(next(self._ticket_ids), template, params, time.time())
+        self._queues[template].append(t)
+        return t
+
+    def submit_update(self, table: str, kind: str, payload: Dict) -> None:
+        """kind: insert | update | delete (payload per storage slots)."""
+        self._update_queue.append((table, kind, payload))
+
+    def pending(self) -> int:
+        return (sum(len(q) for q in self._queues.values())
+                + len(self._update_queue))
+
+    # ------------------------------------------------------------ one beat
+    def _admit_queries(self):
+        batch, admitted = {}, {}
+        for name, tpl in self.plan.templates.items():
+            cap = self.plan.caps[name]
+            n_preds = max(len(tpl.preds), 1)
+            params = np.zeros((cap, n_preds, 2), np.int32)
+            active = np.zeros((cap,), bool)
+            take: List[Ticket] = []
+            q = self._queues[name]
+            while q and len(take) < cap:
+                take.append(q.popleft())
+            for slot, ticket in enumerate(take):
+                active[slot] = True
+                for pi in range(len(tpl.preds)):
+                    lo, hi = ticket.params[pi]
+                    params[slot, pi] = (lo, hi)
+            batch[name] = {"params": jnp.asarray(params),
+                           "active": jnp.asarray(active)}
+            admitted[name] = take
+        return batch, admitted
+
+    def _admit_updates(self):
+        cat = self.plan.catalog
+        s = self.update_slots
+        np_batches = {}
+        for t, schema in cat.schemas.items():
+            np_batches[t] = {
+                "ins_rows": {c: np.zeros((s.n_insert,), np.int32)
+                             for c in schema.columns},
+                "ins_mask": np.zeros((s.n_insert,), bool),
+                "upd_key": np.full((s.n_update,), -1, np.int32),
+                "upd_col": np.zeros((s.n_update,), np.int32),
+                "upd_val": np.zeros((s.n_update,), np.int32),
+                "upd_mask": np.zeros((s.n_update,), bool),
+                "del_key": np.full((s.n_delete,), -1, np.int32),
+                "del_mask": np.zeros((s.n_delete,), bool),
+            }
+        fill = {t: {"ins": 0, "upd": 0, "del": 0} for t in cat.schemas}
+        hold = collections.deque()
+        while self._update_queue:
+            table, kind, payload = self._update_queue.popleft()
+            b, f = np_batches[table], fill[table]
+            if kind == "insert":
+                if f["ins"] >= s.n_insert:
+                    hold.append((table, kind, payload))
+                    continue
+                i = f["ins"]
+                for c, v in payload.items():
+                    b["ins_rows"][c][i] = int(v)
+                b["ins_mask"][i] = True
+                f["ins"] += 1
+            elif kind == "update":
+                if f["upd"] >= s.n_update:
+                    hold.append((table, kind, payload))
+                    continue
+                i = f["upd"]
+                schema = cat.schemas[table]
+                b["upd_key"][i] = int(payload["key"])
+                b["upd_col"][i] = schema.columns.index(payload["col"])
+                b["upd_val"][i] = int(payload["val"])
+                b["upd_mask"][i] = True
+                f["upd"] += 1
+            else:
+                if f["del"] >= s.n_delete:
+                    hold.append((table, kind, payload))
+                    continue
+                i = f["del"]
+                b["del_key"][i] = int(payload["key"])
+                b["del_mask"][i] = True
+                f["del"] += 1
+        self._update_queue = hold
+        return jax.tree.map(jnp.asarray, np_batches)
+
+    def run_cycle(self) -> Dict[str, List[Ticket]]:
+        """One heartbeat: drain queues, execute the global plan, route."""
+        queries, admitted = self._admit_queries()
+        updates = self._admit_updates()
+        self.state, results = self._cycle(self.state, queries, updates)
+        jax.block_until_ready(results)
+        now = time.time()
+        out = {}
+        for name, tickets in admitted.items():
+            res = jax.tree.map(np.asarray, results[name])
+            for slot, ticket in enumerate(tickets):
+                ticket.result = jax.tree.map(lambda a: a[slot], res)
+                ticket.done_time = now
+            out[name] = tickets
+            self.queries_done += len(tickets)
+        self.cycles_run += 1
+        return out
+
+    def run_until_drained(self, max_cycles: int = 1000):
+        done = []
+        while self.pending() and max_cycles:
+            done.append(self.run_cycle())
+            max_cycles -= 1
+        return done
+
+    # --------------------------------------------------- host-side fetch
+    def materialize(self, table: str, row_ids: np.ndarray,
+                    cols: Optional[List[str]] = None) -> Dict[str, np.ndarray]:
+        """Fetch tuples by row id from the current snapshot (result
+        delivery — the Output operator of Fig. 5)."""
+        t = self.state[table]
+        schema = self.plan.catalog.schemas[table]
+        cols = cols or list(schema.columns)
+        ids = np.asarray(row_ids)
+        safe = np.clip(ids, 0, schema.capacity - 1)
+        out = {c: np.where(ids >= 0, np.asarray(t[c])[safe], 0)
+               for c in cols}
+        out["_row"] = ids
+        return out

@@ -1,0 +1,232 @@
+"""Shared relational operators over the data-query model (paper §3.3-3.4).
+
+Every operator processes the UNION of tuples needed by all concurrent
+queries exactly once, carrying the packed query bitmask.  Worst-case work is
+a function of table capacity only — never of the number of queries — which
+is the bounded-computation property behind the paper's SLA guarantees.
+
+The hot loops (shared scan, shared join, shared group-by) have Pallas TPU
+kernels in repro.kernels; these jnp implementations are both the CPU
+execution path and the kernels' oracles.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dataquery as dq
+
+INT_MIN = -2147483647
+INT_MAX = 2147483647
+
+
+# ---------------------------------------------------------------------------
+# Shared scan — ClockScan (query-data join): index the queries, not the data
+# ---------------------------------------------------------------------------
+
+
+def shared_scan(cols, lo, hi, valid):
+    """Evaluate ALL queries' conjunctive range predicates in one pass.
+
+    cols:  int32[C, T]  predicated column values
+    lo,hi: int32[C, Q]  per-query inclusive bounds (full range = no pred;
+                        queries not scanning this table use [1, 0] = fail)
+    valid: bool[T]      live rows
+    Returns packed bitmask uint32[T, Q/32].
+    """
+    from repro.kernels import ops as kops
+    return kops.clockscan(cols, lo, hi, valid)
+
+
+def shared_scan_ref(cols, lo, hi, valid):
+    C, T = cols.shape
+    ok = jnp.ones((T, lo.shape[1]), bool)
+    for c in range(C):
+        x = cols[c][:, None]
+        ok &= (x >= lo[c][None, :]) & (x <= hi[c][None, :])
+    ok &= valid[:, None]
+    return dq.pack(ok)
+
+
+# ---------------------------------------------------------------------------
+# Shared join — one big join; query-set intersection == query_id predicate
+# ---------------------------------------------------------------------------
+
+
+def shared_join_fk(fk, left_mask, pk_index, right_mask):
+    """PK-FK shared join (the paper's >< with query_id in the predicate).
+
+    fk:         int32[T_l] foreign key of the left (spine) relation
+    left_mask:  uint32[T_l, W]
+    pk_index:   int32[K]  dense key -> right row (-1 absent)
+    right_mask: uint32[T_r, W]
+    Returns (right_row int32[T_l]  (-1 = no match),
+             combined mask uint32[T_l, W] = left & right[match]).
+    """
+    K = pk_index.shape[0]
+    safe_fk = jnp.clip(fk, 0, K - 1)
+    r = jnp.where((fk >= 0) & (fk < K), pk_index[safe_fk], -1)
+    gathered = right_mask[jnp.clip(r, 0, right_mask.shape[0] - 1)]
+    combined = jnp.where((r >= 0)[:, None], left_mask & gathered,
+                         jnp.uint32(0))
+    return r, combined
+
+
+def shared_join_block_ref(keys_l, mask_l, keys_r, mask_r, valid_r):
+    """Block nested-loop shared join oracle (general equality keys with
+    UNIQUE right keys).  Mirrors kernels/bitmask_join.py.
+
+    Returns (matched right row per left row (-1 none), combined mask).
+    """
+    eq = (keys_l[:, None] == keys_r[None, :]) & valid_r[None, :]
+    eqi = eq.astype(jnp.uint32)
+    # unique right keys: sum over matches == the single match
+    combined = mask_l & (eqi @ mask_r)
+    rid = (eq.astype(jnp.int32)
+           @ (jnp.arange(keys_r.shape[0], dtype=jnp.int32) + 1)) - 1
+    return rid, jnp.where((rid >= 0)[:, None], combined, jnp.uint32(0))
+
+
+# ---------------------------------------------------------------------------
+# Union compression: extract the tuples at least one query wants.
+#
+# The paper's shared operators process "the union of all R and S tuples that
+# the queries are interested in" (Fig. 3/4) — NOT the whole table.  The
+# union is extracted with a BOUNDED capacity (bounded computation, §3.5):
+# per-cycle work stays a static function of the cap; overflow beyond the
+# cap is reported, never silently mis-answered (rows past the cap are
+# dropped deterministically from the tail).
+# ---------------------------------------------------------------------------
+
+
+def compress_union(mask, cap: int):
+    """Returns (row_idx int32[cap] (-1 pad), cmask uint32[cap, W],
+    n_wanted int32 — observability: n_wanted > cap means overflow)."""
+    T = mask.shape[0]
+    wanted = dq.any_query(mask)
+    n_wanted = jnp.sum(wanted.astype(jnp.int32))
+    idx = jnp.nonzero(wanted, size=cap, fill_value=T)[0]
+    safe = jnp.minimum(idx, T - 1).astype(jnp.int32)
+    live = idx < T
+    cmask = jnp.where(live[:, None], mask[safe], jnp.uint32(0))
+    rows = jnp.where(live, safe, -1).astype(jnp.int32)
+    return rows, cmask, n_wanted
+
+
+# ---------------------------------------------------------------------------
+# Shared sort + per-query Top-N (paper Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+def shared_sort(sort_key, mask, descending: bool = False):
+    """ONE sort over the union of interested tuples; bitmask rides along.
+
+    Rows wanted by nobody sort to the end.  Returns (perm, sorted_mask).
+    """
+    wanted = dq.any_query(mask)
+    key = jnp.where(wanted, sort_key, INT_MAX)
+    if descending:
+        key = jnp.where(wanted, -sort_key, INT_MAX)
+    perm = jnp.argsort(key, stable=True)
+    return perm, mask[perm]
+
+
+def shared_topn(sorted_mask, n_per_query):
+    """Phase 2 of shared Top-N: per-query rank filter (cheap, per query).
+
+    sorted_mask: uint32[T, W] in sort order; n_per_query: int32[Q].
+    Returns filtered mask keeping each query's first n bits.
+    """
+    bits = dq.unpack(sorted_mask)                    # [T, Q]
+    rank = jnp.cumsum(bits.astype(jnp.int32), axis=0)
+    keep = bits & (rank <= n_per_query[None, :])
+    return dq.pack(keep)
+
+
+# ---------------------------------------------------------------------------
+# Shared group-by — aggregation as MXU matmul
+# ---------------------------------------------------------------------------
+
+
+def shared_groupby(group_code, values, mask, n_groups: int):
+    """Phase-1 grouping + per-query aggregates for ALL queries at once.
+
+    group_code: int32[T] in [0, n_groups)  (e.g. dict-encoded column)
+    values:     int32[T] aggregation operand
+    mask:       uint32[T, W]
+    Returns (count f32[G, Q], sum f32[G, Q]).
+
+    TPU mapping: one-hot(group)^T @ unpacked-mask is a dense contraction —
+    the MXU computes "all groups x all queries" in a single pass.  See
+    kernels/shared_groupby.py for the tiled Pallas version.
+    """
+    from repro.kernels import ops as kops
+    return kops.shared_groupby(group_code, values, mask, n_groups)
+
+
+def shared_groupby_ref(group_code, values, mask, n_groups: int):
+    bits = dq.unpack(mask).astype(jnp.float32)       # [T, Q]
+    onehot = jax.nn.one_hot(group_code, n_groups, dtype=jnp.float32)
+    count = onehot.T @ bits
+    ssum = onehot.T @ (bits * values[:, None].astype(jnp.float32))
+    return count, ssum
+
+
+# ---------------------------------------------------------------------------
+# Result routing (the paper's Gamma operator): top-R row ids per query
+# ---------------------------------------------------------------------------
+
+
+def route_topn(mask_in_order, n_per_query, max_results: int, rows=None):
+    """Fused shared Top-N + result routing: ONE unpack + cumsum pass.
+
+    mask_in_order: uint32[K, W] in output order (typically the compressed
+    union, post-sort); rows: int32[K] storage row ids (-1 invalid; default
+    the positional index); n_per_query: int32[W*32].
+    Returns int32[Q, max_results] row ids (-1 padded).
+    """
+    K, W = mask_in_order.shape
+    Q = W * dq.WORD
+    bits = dq.unpack(mask_in_order)                  # [K, Q]
+    if rows is None:
+        rows = jnp.arange(K, dtype=jnp.int32)
+    bits &= (rows >= 0)[:, None]
+    rank = jnp.cumsum(bits.astype(jnp.int32), axis=0) - 1
+    keep = bits & (rank < jnp.minimum(n_per_query, max_results)[None, :])
+    # at most Q*max_results entries survive: compress before scattering
+    # (scatters are serial-ish on CPU; keep them tiny)
+    flat = jnp.nonzero(keep.reshape(-1), size=Q * max_results,
+                       fill_value=K * Q)[0]
+    safe = jnp.minimum(flat, K * Q - 1)
+    live = flat < K * Q
+    k_idx = safe // Q
+    q_idx = jnp.where(live, safe % Q, Q)
+    slot = jnp.where(live, rank.reshape(-1)[safe], max_results)
+    out = jnp.full((Q, max_results), -1, jnp.int32)
+    out = out.at[q_idx, slot].set(rows[k_idx], mode="drop")
+    return out
+
+
+def route_results(mask_in_order, max_results: int, perm=None):
+    """Per query: first `max_results` row ids whose bit is set, in order.
+
+    mask_in_order: uint32[T, W] (already in output order, e.g. post-sort).
+    perm: optional int32[T] mapping positions back to storage row ids.
+    Returns int32[Q, max_results] row ids (-1 padded).
+    """
+    T, W = mask_in_order.shape
+    Q = W * dq.WORD
+    bits = dq.unpack(mask_in_order)                  # [T, Q]
+    rank = jnp.cumsum(bits.astype(jnp.int32), axis=0) - 1
+    rows = jnp.arange(T, dtype=jnp.int32)
+    if perm is not None:
+        rows = perm.astype(jnp.int32)
+    out = jnp.full((Q, max_results), -1, jnp.int32)
+    q_idx = jnp.broadcast_to(jnp.arange(Q)[None, :], (T, Q))
+    slot = jnp.where(bits & (rank < max_results), rank, max_results)
+    out = out.at[q_idx.reshape(-1),
+                 slot.reshape(-1)].set(
+        jnp.broadcast_to(rows[:, None], (T, Q)).reshape(-1), mode="drop")
+    return out

@@ -1,0 +1,390 @@
+"""Global query plan (paper §3.2-3.3, Fig. 2/3/6).
+
+The whole workload — a set of parameterized query *templates* (the JDBC
+PreparedStatements of the paper) — compiles ONCE into a single dataflow
+plan shared by every concurrent query:
+
+  1. per query template, predicates are pushed down to base tables
+     (logical optimization, Fig. 3 middle);
+  2. templates are merged: ONE shared scan node per base table, ONE shared
+     join node per (spine, fk, pk) signature, ONE shared sort node per
+     (spine, column, direction), ONE shared group-by node per
+     (spine, group-col, agg-col) — sharing across templates AND across
+     concurrent instances of the same template falls out automatically;
+  3. each template is assigned a static slot range in the global query-id
+     space; per-node subscriber bitmasks select which queries a node's
+     output applies to (queries become data).
+
+The compiled plan is a pure function executed once per heartbeat
+(executor.py); its jitted XLA executable is the paper's always-on plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dataquery as dq
+from repro.core import operators as ops
+from repro.core.storage import Catalog
+
+INT_MIN = ops.INT_MIN
+INT_MAX = ops.INT_MAX
+
+
+# ---------------------------------------------------------------------------
+# Template language
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Pred:
+    table: str
+    col: str               # parameterized inclusive range [lo, hi]
+
+
+@dataclasses.dataclass(frozen=True)
+class Join:
+    fk_col: str            # on the spine
+    pk_table: str
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupAgg:
+    group_col: str         # spine-local dict-encoded column
+    n_groups: int
+    agg_col: str           # spine-local value column (summed)
+    top_k: int
+    order_by: str = "sum"  # "sum" | "count"
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryTemplate:
+    name: str
+    spine: str
+    preds: Tuple[Pred, ...] = ()
+    joins: Tuple[Join, ...] = ()
+    sort_col: Optional[str] = None     # spine-local
+    sort_desc: bool = False
+    limit: int = 16
+    group: Optional[GroupAgg] = None
+
+    def tables(self) -> Tuple[str, ...]:
+        return (self.spine,) + tuple(j.pk_table for j in self.joins)
+
+
+# ---------------------------------------------------------------------------
+# Compiled plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ScanNode:
+    table: str
+    cols: Tuple[str, ...]                  # predicated columns
+    # per (template, pred) -> (col index, param index): filled by compiler
+    bindings: List[Tuple[str, int, int]]   # (template, col_idx, param_idx)
+    referencing: List[str]                 # templates whose graph has table
+
+
+@dataclasses.dataclass
+class JoinNode:
+    spine: str
+    fk_col: str
+    pk_table: str
+    subscribers: List[str]
+
+
+@dataclasses.dataclass
+class SortNode:
+    spine: str
+    col: str
+    desc: bool
+    subscribers: List[str]
+
+
+@dataclasses.dataclass
+class GroupNode:
+    spine: str
+    agg: GroupAgg
+    subscribers: List[str]
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    catalog: Catalog
+    templates: Dict[str, QueryTemplate]
+    caps: Dict[str, int]                   # per-template slot capacity
+    offsets: Dict[str, int]                # slot range start per template
+    qcap: int                              # global query-id capacity
+    scans: Dict[str, ScanNode]
+    joins: List[JoinNode]
+    sorts: List[SortNode]
+    groups: List[GroupNode]
+    max_results: int
+    # bounded union-extraction capacities (paper §3.5: work is a static
+    # function of these, independent of query count; overflow is counted)
+    union_cap: int = 8192
+    group_union_cap: int = 16384
+
+    def sub_mask(self, names: List[str]) -> np.ndarray:
+        """uint32[W] subscriber word-mask for a set of templates."""
+        bits = np.zeros(self.qcap, bool)
+        for t in names:
+            bits[self.offsets[t]:self.offsets[t] + self.caps[t]] = True
+        W = self.qcap // 32
+        out = np.zeros(W, np.uint32)
+        for w in range(W):
+            val = 0
+            for b in range(32):
+                if bits[w * 32 + b]:
+                    val |= (1 << b)
+            out[w] = val
+        return out
+
+    def word_range(self, names: List[str]) -> Tuple[int, int]:
+        """Smallest [wlo, whi) word window covering these templates' slots.
+
+        Templates are laid out spine-clustered (workload definition order),
+        so per-node mask processing only touches its subscribers' words —
+        the per-operator work no longer scales with the GLOBAL query
+        capacity, only with the operator's own (paper §4.2: per-operator
+        queues/capacity).
+        """
+        lo = min(self.offsets[t] for t in names)
+        hi = max(self.offsets[t] + self.caps[t] for t in names)
+        return lo // 32, -(-hi // 32)
+
+
+def compile_plan(catalog: Catalog, templates: List[QueryTemplate],
+                 caps: Dict[str, int], max_results: int = 64) -> CompiledPlan:
+    offsets, off = {}, 0
+    for t in templates:
+        offsets[t.name] = off
+        off += caps[t.name]
+    qcap = -(-off // 32) * 32
+
+    # --- scan nodes: one per table, union of predicated columns ----------
+    scans: Dict[str, ScanNode] = {}
+    for t in templates:
+        for table in t.tables():
+            node = scans.setdefault(
+                table, ScanNode(table, (), [], []))
+            if t.name not in node.referencing:
+                node.referencing.append(t.name)
+    for t in templates:
+        for pi, p in enumerate(t.preds):
+            node = scans[p.table]
+            if p.col not in node.cols:
+                node.cols = node.cols + (p.col,)
+            node.bindings.append((t.name, node.cols.index(p.col), pi))
+
+    # --- join nodes: dedupe by (spine, fk, pk) ----------------------------
+    joins: Dict[Tuple[str, str, str], JoinNode] = {}
+    for t in templates:
+        for j in t.joins:
+            key = (t.spine, j.fk_col, j.pk_table)
+            node = joins.setdefault(
+                key, JoinNode(t.spine, j.fk_col, j.pk_table, []))
+            node.subscribers.append(t.name)
+
+    # --- sort nodes: dedupe by (spine, col, desc) --------------------------
+    sorts: Dict[Tuple[str, str, bool], SortNode] = {}
+    for t in templates:
+        if t.sort_col:
+            key = (t.spine, t.sort_col, t.sort_desc)
+            node = sorts.setdefault(
+                key, SortNode(t.spine, t.sort_col, t.sort_desc, []))
+            node.subscribers.append(t.name)
+
+    # --- group-by nodes ----------------------------------------------------
+    groups: Dict[Tuple[str, str, str], GroupNode] = {}
+    for t in templates:
+        if t.group:
+            key = (t.spine, t.group.group_col, t.group.agg_col)
+            node = groups.setdefault(key, GroupNode(t.spine, t.group, []))
+            node.subscribers.append(t.name)
+
+    return CompiledPlan(
+        catalog=catalog,
+        templates={t.name: t for t in templates},
+        caps=dict(caps), offsets=offsets, qcap=qcap,
+        scans=scans, joins=list(joins.values()),
+        sorts=list(sorts.values()), groups=list(groups.values()),
+        max_results=max_results)
+
+
+# ---------------------------------------------------------------------------
+# The cycle function: one heartbeat of the always-on plan
+# ---------------------------------------------------------------------------
+
+
+def build_cycle_fn(plan: CompiledPlan, update_slots, kernels: str = "auto"):
+    """Returns cycle(storage, queries, updates) -> (storage', results).
+
+    queries: {template: {"params": int32[cap, n_preds, 2],
+                          "active": bool[cap]}}
+    updates: {table: update batch dict (see storage.empty_update_batch)}
+    results: per template row-id matrices / group top-k; all fixed shapes.
+    """
+    from repro.core.storage import apply_updates
+
+    cat = plan.catalog
+    W = plan.qcap // 32
+    # precompute static subscriber masks
+    join_subs = [jnp.asarray(plan.sub_mask(j.subscribers)) for j in plan.joins]
+    sort_subs = [jnp.asarray(plan.sub_mask(s.subscribers)) for s in plan.sorts]
+
+    # per-template static n-limit vector for shared top-n
+    limits = np.ones(plan.qcap, np.int32)
+    for name, t in plan.templates.items():
+        o, c = plan.offsets[name], plan.caps[name]
+        limits[o:o + c] = min(t.limit, plan.max_results)
+    limits = jnp.asarray(limits)
+
+    def cycle(storage, queries, updates):
+        # 1. apply updates in arrival order (cycle-consistent snapshot)
+        storage = dict(storage)
+        for table, batch in updates.items():
+            storage[table] = apply_updates(cat.schemas[table],
+                                           storage[table], batch)
+
+        # 2. shared scans (ClockScan): one pass per table for ALL queries.
+        #    Each scan only evaluates the word window of templates that
+        #    reference its table (zero elsewhere: nobody subscribed).
+        scan_masks = {}
+        W_full = plan.qcap // 32
+        for table, node in plan.scans.items():
+            tbl = storage[table]
+            C = max(len(node.cols), 1)
+            T = cat.schemas[table].capacity
+            wlo, whi = plan.word_range(node.referencing)
+            q_sub = (whi - wlo) * 32
+            base = wlo * 32
+            lo = jnp.full((C, q_sub), INT_MAX, jnp.int32)  # default: fail
+            hi = jnp.full((C, q_sub), INT_MIN, jnp.int32)
+            # referencing templates: default pass-all on their slots
+            for name in node.referencing:
+                o, c = plan.offsets[name] - base, plan.caps[name]
+                act = queries[name]["active"]
+                lo = lo.at[:, o:o + c].set(
+                    jnp.where(act[None, :], INT_MIN, INT_MAX))
+                hi = hi.at[:, o:o + c].set(
+                    jnp.where(act[None, :], INT_MAX, INT_MIN))
+            # bound predicated columns from query params
+            for name, col_idx, param_idx in node.bindings:
+                o, c = plan.offsets[name] - base, plan.caps[name]
+                act = queries[name]["active"]
+                p = queries[name]["params"][:, param_idx]     # [cap, 2]
+                lo = lo.at[col_idx, o:o + c].set(
+                    jnp.where(act, p[:, 0], INT_MAX))
+                hi = hi.at[col_idx, o:o + c].set(
+                    jnp.where(act, p[:, 1], INT_MIN))
+            cols = (jnp.stack([tbl[c] for c in node.cols])
+                    if node.cols else jnp.zeros((1, T), jnp.int32))
+            m = ops.shared_scan(cols, lo, hi, tbl["_valid"])
+            scan_masks[table] = jnp.pad(m, ((0, 0), (wlo, W_full - whi)))
+
+        # 3. shared joins: ONE big join per signature, query_id in the
+        #    predicate via bitmask intersection; non-subscribers pass through
+        spine_masks = {t: scan_masks[t] for t in plan.scans}
+        join_rids = {}
+        for node, sub in zip(plan.joins, join_subs):
+            tbl = storage[node.spine]
+            pk_schema = cat.schemas[node.pk_table]
+            rid, combined = ops.shared_join_fk(
+                tbl[node.fk_col], spine_masks[node.spine],
+                storage[node.pk_table]["_pk_index"],
+                scan_masks[node.pk_table])
+            m = spine_masks[node.spine]
+            spine_masks[node.spine] = (combined & sub[None, :]) \
+                | (m & ~sub[None, :])
+            join_rids[(node.spine, node.fk_col, node.pk_table)] = rid
+
+        # 4. shared sorts + fused per-query top-n + routing (Gamma).
+        #    Per the paper (Fig. 4), the sort runs over the UNION of
+        #    tuples wanted by the node's subscribers — extracted with a
+        #    bounded cap; each node only touches its subscribers' words.
+        results = {}
+        routed = set()
+        overflow = jnp.zeros((), jnp.int32)
+        for node, sub in zip(plan.sorts, sort_subs):
+            wlo, whi = plan.word_range(node.subscribers)
+            mask = spine_masks[node.spine][:, wlo:whi] \
+                & sub[None, wlo:whi]
+            T = cat.schemas[node.spine].capacity
+            cap = min(T, plan.union_cap)
+            rows_c, cmask, n_want = ops.compress_union(mask, cap)
+            overflow += jnp.maximum(n_want - cap, 0)
+            keys = storage[node.spine][node.col][
+                jnp.maximum(rows_c, 0)]
+            keys = jnp.where(rows_c >= 0,
+                             -keys if node.desc else keys, ops.INT_MAX)
+            perm = jnp.argsort(keys, stable=True)
+            rows = ops.route_topn(cmask[perm],
+                                  limits[wlo * 32:whi * 32],
+                                  plan.max_results, rows=rows_c[perm])
+            for name in node.subscribers:
+                o, c = plan.offsets[name], plan.caps[name]
+                results[name] = {"rows": rows[o - wlo * 32:
+                                              o - wlo * 32 + c]}
+                routed.add(name)
+
+        # 5. shared group-bys (phase 1 shared over the union, phase 2 per
+        #    query)
+        for node in plan.groups:
+            agg = node.agg
+            tbl = storage[node.spine]
+            wlo, whi = plan.word_range(node.subscribers)
+            T = cat.schemas[node.spine].capacity
+            cap = min(T, plan.group_union_cap)
+            rows_c, cmask, n_want = ops.compress_union(
+                spine_masks[node.spine][:, wlo:whi], cap)
+            overflow += jnp.maximum(n_want - cap, 0)
+            safe = jnp.maximum(rows_c, 0)
+            gcodes = jnp.where(rows_c >= 0, tbl[agg.group_col][safe], 0)
+            gvals = jnp.where(rows_c >= 0, tbl[agg.agg_col][safe], 0)
+            count, ssum = ops.shared_groupby(gcodes, gvals, cmask,
+                                             agg.n_groups)
+            score = ssum if agg.order_by == "sum" else count
+            top_val, top_grp = jax.lax.top_k(score.T, agg.top_k)  # [q, K]
+            for name in node.subscribers:
+                o = plan.offsets[name] - wlo * 32
+                c = plan.caps[name]
+                results[name] = {
+                    "groups": top_grp[o:o + c].astype(jnp.int32),
+                    "scores": top_val[o:o + c],
+                    "counts": jnp.take_along_axis(
+                        count.T[o:o + c], top_grp[o:o + c], axis=1)}
+                routed.add(name)
+
+        # 6. unsorted templates route in natural row order — ONE routing
+        #    pass per spine shared by all such templates
+        by_spine: Dict[str, List[str]] = {}
+        for name, t in plan.templates.items():
+            if name not in routed:
+                by_spine.setdefault(t.spine, []).append(name)
+        for spine, names in by_spine.items():
+            wlo, whi = plan.word_range(names)
+            sub = jnp.asarray(plan.sub_mask(names))
+            mask = spine_masks[spine][:, wlo:whi] & sub[None, wlo:whi]
+            T = cat.schemas[spine].capacity
+            cap = min(T, plan.union_cap)
+            rows_c, cmask, n_want = ops.compress_union(mask, cap)
+            overflow += jnp.maximum(n_want - cap, 0)
+            rows = ops.route_topn(cmask, limits[wlo * 32:whi * 32],
+                                  plan.max_results, rows=rows_c)
+            for name in names:
+                o, c = plan.offsets[name], plan.caps[name]
+                results[name] = {"rows": rows[o - wlo * 32:
+                                              o - wlo * 32 + c]}
+        results["_overflow"] = overflow
+
+        # attach join rids so hosts can materialize joined tuples
+        results["_join_rids"] = join_rids
+        return storage, results
+
+    return cycle

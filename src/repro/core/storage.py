@@ -1,0 +1,148 @@
+"""Columnar storage manager with functional MVCC snapshots.
+
+The Crescando-style storage layer of the paper (§4.4), adapted to JAX:
+tables are fixed-capacity columnar int32 arrays (strings dictionary-encoded,
+money in cents, dates as int days).  A *snapshot* is simply the immutable
+pytree — a cycle physically cannot observe concurrent writes, which is the
+paper's snapshot-isolation guarantee by construction.
+
+Updates (insert / update / delete) are applied *in arrival order* at the
+start of each cycle via fixed-capacity scatter batches, mirroring ClockScan
+semantics: every select in cycle k sees exactly the updates admitted to
+cycle k.
+
+Primary-key tables maintain a dense key->row index (scatter-maintained) so
+shared PK-FK joins are O(1) gathers — the TPU-native replacement for the
+paper's hash join (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NULL = jnp.int32(-2147483648)
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSchema:
+    name: str
+    columns: Tuple[str, ...]
+    capacity: int
+    pk: Optional[str] = None      # primary-key column (dense int domain)
+    key_space: int = 0            # max pk value + 1 (dense index size)
+
+
+def empty_table(schema: TableSchema) -> Dict:
+    t = {c: jnp.zeros((schema.capacity,), jnp.int32)
+         for c in schema.columns}
+    t["_valid"] = jnp.zeros((schema.capacity,), bool)
+    t["_n"] = jnp.zeros((), jnp.int32)       # append cursor
+    t["_version"] = jnp.zeros((), jnp.int32)
+    if schema.pk:
+        t["_pk_index"] = jnp.full((schema.key_space,), -1, jnp.int32)
+    return t
+
+
+def bulk_load(schema: TableSchema, data: Dict[str, jnp.ndarray]) -> Dict:
+    """Load host arrays (all the same length) into a fresh table."""
+    n = len(next(iter(data.values())))
+    assert n <= schema.capacity, f"{schema.name}: {n} > {schema.capacity}"
+    t = empty_table(schema)
+    for c in schema.columns:
+        col = jnp.asarray(data[c], jnp.int32)
+        t[c] = t[c].at[:n].set(col)
+    t["_valid"] = t["_valid"].at[:n].set(True)
+    t["_n"] = jnp.int32(n)
+    if schema.pk:
+        t["_pk_index"] = t["_pk_index"].at[t[schema.pk][:n]].set(
+            jnp.arange(n, dtype=jnp.int32))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Update batches: fixed-capacity, applied in arrival order.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateSlots:
+    """Static shape of a table's per-cycle update batch."""
+    n_insert: int
+    n_update: int
+    n_delete: int
+
+
+def empty_update_batch(schema: TableSchema, slots: UpdateSlots) -> Dict:
+    return {
+        "ins_rows": {c: jnp.zeros((slots.n_insert,), jnp.int32)
+                     for c in schema.columns},
+        "ins_mask": jnp.zeros((slots.n_insert,), bool),
+        # updates: set column `upd_col[i]` of row with pk `upd_key[i]`
+        "upd_key": jnp.full((slots.n_update,), -1, jnp.int32),
+        "upd_col": jnp.zeros((slots.n_update,), jnp.int32),
+        "upd_val": jnp.zeros((slots.n_update,), jnp.int32),
+        "upd_mask": jnp.zeros((slots.n_update,), bool),
+        "del_key": jnp.full((slots.n_delete,), -1, jnp.int32),
+        "del_mask": jnp.zeros((slots.n_delete,), bool),
+    }
+
+
+def apply_updates(schema: TableSchema, table: Dict, batch: Dict) -> Dict:
+    """Deletes, then column updates, then inserts — all in slot order.
+
+    Slot order IS arrival order: the executor fills slots FIFO.
+    """
+    t = dict(table)
+    n = t["_n"]
+
+    if schema.pk:
+        # deletes: invalidate row, clear pk index
+        del_row = jnp.where(batch["del_mask"],
+                            t["_pk_index"][batch["del_key"]], -1)
+        ok = del_row >= 0
+        t["_valid"] = t["_valid"].at[jnp.where(ok, del_row, 0)].set(
+            jnp.where(ok, False, t["_valid"][0]))
+        t["_pk_index"] = t["_pk_index"].at[
+            jnp.where(ok, batch["del_key"], schema.key_space)].set(
+            -1, mode="drop")
+
+        # point updates by pk: scatter into (row, col)
+        upd_row = jnp.where(batch["upd_mask"],
+                            t["_pk_index"][batch["upd_key"]], -1)
+        for ci, c in enumerate(schema.columns):
+            sel = (batch["upd_col"] == ci) & (upd_row >= 0)
+            rows = jnp.where(sel, upd_row, schema.capacity)
+            t[c] = t[c].at[rows].set(
+                jnp.where(sel, batch["upd_val"], 0), mode="drop")
+
+    # inserts: append at cursor (slot order preserved by arange offset)
+    k = batch["ins_mask"].shape[0]
+    offs = jnp.cumsum(batch["ins_mask"].astype(jnp.int32)) - 1
+    rows = jnp.where(batch["ins_mask"], n + offs, schema.capacity)
+    for c in schema.columns:
+        t[c] = t[c].at[rows].set(batch["ins_rows"][c], mode="drop")
+    t["_valid"] = t["_valid"].at[rows].set(True, mode="drop")
+    n_new = n + jnp.sum(batch["ins_mask"].astype(jnp.int32))
+    if schema.pk:
+        keys = jnp.where(batch["ins_mask"], batch["ins_rows"][schema.pk],
+                         schema.key_space)
+        t["_pk_index"] = t["_pk_index"].at[keys].set(
+            rows.astype(jnp.int32), mode="drop")
+    t["_n"] = n_new
+    t["_version"] = t["_version"] + 1
+    return t
+
+
+class Catalog:
+    """Schema registry + initial state construction."""
+
+    def __init__(self, schemas: List[TableSchema]):
+        self.schemas = {s.name: s for s in schemas}
+
+    def init_state(self, data: Dict[str, Dict[str, jnp.ndarray]]) -> Dict:
+        return {name: bulk_load(s, data[name]) if name in data
+                else empty_table(s)
+                for name, s in self.schemas.items()}

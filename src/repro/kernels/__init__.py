@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for SharedDB's compute hot-spots + the LM serving path.
+
+Layout per kernel: <name>.py holds the pl.pallas_call + BlockSpec tiling;
+ref.py holds pure-jnp oracles; ops.py holds the jit'd dispatch wrappers
+(ref path on CPU, Pallas on TPU, interpret=True for CPU validation).
+"""

@@ -1,0 +1,87 @@
+"""Shared block join kernel: key-equality outer compare fused with
+query-set intersection (the paper's shared join, §3.3).
+
+  grid = (T_left // TILE_L, T_right // TILE_R)   (right tiles innermost —
+                                                  sequential reduction)
+  blocks: keys_l [TILE_L], mask_l [TILE_L, W],
+          keys_r [TILE_R], mask_r [TILE_R, W], valid_r [TILE_R]
+  outs:   rid    [TILE_L]        matched right row (-1 = none)
+          out    [TILE_L, W]     mask_l & mask_r[match]
+
+Inner tile computes eq = keys_l x keys_r outer equality, then accumulates
+  mask  += eq @ mask_r      (unique right keys => sum == the single match;
+                             an integer contraction — MXU-adjacent)
+  rid   = max(rid, eq * (row+1))
+The final right tile ANDs in mask_l and converts rid to -1-based.  The
+query-set intersection here IS the amended join predicate
+``R.query_id = S.query_id`` of the paper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_L = 256
+TILE_R = 256
+
+
+def _kernel(keys_l_ref, mask_l_ref, keys_r_ref, mask_r_ref, valid_r_ref,
+            rid_ref, out_ref, *, n_right_tiles: int, tile_r: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        rid_ref[...] = jnp.zeros_like(rid_ref)
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys_l = keys_l_ref[...]                         # [Tl]
+    keys_r = keys_r_ref[...]                         # [Tr]
+    eq = (keys_l[:, None] == keys_r[None, :]) & valid_r_ref[...][None, :]
+    eq_u = eq.astype(jnp.uint32)
+    # sum over the (unique-key) match: [Tl, Tr] x [Tr, W] contraction
+    acc = jnp.einsum("lr,rw->lw", eq_u, mask_r_ref[...])
+    out_ref[...] = out_ref[...] | acc.astype(jnp.uint32)
+    base = j * tile_r
+    rows = base + jnp.arange(keys_r.shape[0], dtype=jnp.int32) + 1
+    cand = jnp.max(jnp.where(eq, rows[None, :], 0), axis=1)
+    rid_ref[...] = jnp.maximum(rid_ref[...], cand)
+
+    @pl.when(j == n_right_tiles - 1)
+    def _finalize():
+        matched = rid_ref[...] > 0
+        out_ref[...] = jnp.where(matched[:, None],
+                                 out_ref[...] & mask_l_ref[...],
+                                 jnp.uint32(0))
+        rid_ref[...] = rid_ref[...] - 1
+
+
+def bitmask_join_pallas(keys_l, mask_l, keys_r, mask_r, valid_r, *,
+                        interpret: bool = True):
+    Tl, W = mask_l.shape
+    Tr = keys_r.shape[0]
+    tl, tr = min(TILE_L, Tl), min(TILE_R, Tr)
+    assert Tl % tl == 0 and Tr % tr == 0
+    kernel = functools.partial(_kernel, n_right_tiles=Tr // tr, tile_r=tr)
+    return pl.pallas_call(
+        kernel,
+        grid=(Tl // tl, Tr // tr),
+        in_specs=[
+            pl.BlockSpec((tl,), lambda i, j: (i,)),
+            pl.BlockSpec((tl, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((tr,), lambda i, j: (j,)),
+            pl.BlockSpec((tr, W), lambda i, j: (j, 0)),
+            pl.BlockSpec((tr,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tl,), lambda i, j: (i,)),
+            pl.BlockSpec((tl, W), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tl,), jnp.int32),
+            jax.ShapeDtypeStruct((Tl, W), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(keys_l, mask_l, keys_r, mask_r, valid_r)

@@ -1,0 +1,73 @@
+"""ClockScan shared-scan kernel: evaluate ALL queries against a tuple tile.
+
+The paper's storage layer (Crescando [28]) "indexes the queries, not the
+data" and joins query predicates against tuples in one clock pass.  On TPU
+this becomes a query-data outer comparison per tuple tile:
+
+  grid            = (T // TILE_T,)
+  cols block      = [C, TILE_T]   (VMEM; C = predicated columns, small)
+  lo/hi blocks    = [C, Q]        (whole predicate matrix resident in VMEM —
+                                   queries ARE the indexed side)
+  out block       = [TILE_T, W]   packed uint32 bitmask words
+
+Per tile: broadcast compare (VPU), AND-reduce over columns, then shift-OR
+bit-pack 32 query lanes per word.  Work per tile is O(C * TILE_T * Q)
+independent of selectivity or query count <= Q — bounded computation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_T = 256
+
+
+def _kernel(cols_ref, lo_ref, hi_ref, valid_ref, out_ref, *, n_cols: int,
+            qcap: int):
+    tile = out_ref.shape[0]
+    ok = jnp.ones((tile, qcap), jnp.bool_)
+    for c in range(n_cols):
+        x = cols_ref[c, :][:, None]                      # [Tt, 1]
+        ok &= (x >= lo_ref[c, :][None, :]) & (x <= hi_ref[c, :][None, :])
+    ok &= valid_ref[...][:, None]
+    w = qcap // 32
+    bits = ok.reshape(tile, w, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    out_ref[...] = jnp.sum(bits * weights[None, None, :], axis=-1,
+                           dtype=jnp.uint32)
+
+
+def clockscan_pallas(cols, lo, hi, valid, *, interpret: bool = True):
+    """cols int32[C,T]; lo/hi int32[C,Q]; valid bool[T] -> uint32[T,Q/32]."""
+    C, T_orig = cols.shape
+    Q = lo.shape[1]
+    assert Q % 32 == 0
+    tile = min(TILE_T, T_orig)
+    pad = (-T_orig) % tile
+    if pad:  # arbitrary table capacities: pad rows (invalid -> all-zero)
+        cols = jnp.pad(cols, ((0, 0), (0, pad)))
+        valid = jnp.pad(valid, (0, pad))
+    T = T_orig + pad
+    W = Q // 32
+    kernel = functools.partial(_kernel, n_cols=C, qcap=Q)
+    out = _call(kernel, cols, lo, hi, valid, C, T, Q, W, tile, interpret)
+    return out[:T_orig]
+
+
+def _call(kernel, cols, lo, hi, valid, C, T, Q, W, tile, interpret):
+    return pl.pallas_call(
+        kernel,
+        grid=(T // tile,),
+        in_specs=[
+            pl.BlockSpec((C, tile), lambda i: (0, i)),
+            pl.BlockSpec((C, Q), lambda i: (0, 0)),
+            pl.BlockSpec((C, Q), lambda i: (0, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, W), jnp.uint32),
+        interpret=interpret,
+    )(cols, lo, hi, valid)

@@ -1,0 +1,61 @@
+"""Jit'd dispatch wrappers: jnp reference path on CPU, Pallas on TPU.
+
+``REPRO_KERNELS=pallas`` forces the Pallas path (interpret=True off-TPU),
+which is how the kernel test-suite validates every kernel against ref.py.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import ref as _ref
+
+
+def _backend() -> str:
+    forced = os.environ.get("REPRO_KERNELS")
+    if forced:
+        return forced
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _clockscan_ref(cols, lo, hi, valid):
+    return _ref.clockscan_ref(cols, lo, hi, valid)
+
+
+def clockscan(cols, lo, hi, valid):
+    if _backend() == "pallas":
+        from repro.kernels.clockscan import clockscan_pallas
+        return clockscan_pallas(cols, lo, hi, valid,
+                                interpret=_interpret())
+    return _ref.clockscan_ref(cols, lo, hi, valid)
+
+
+def bitmask_join(keys_l, mask_l, keys_r, mask_r, valid_r):
+    if _backend() == "pallas":
+        from repro.kernels.bitmask_join import bitmask_join_pallas
+        return bitmask_join_pallas(keys_l, mask_l, keys_r, mask_r, valid_r,
+                                   interpret=_interpret())
+    return _ref.bitmask_join_ref(keys_l, mask_l, keys_r, mask_r, valid_r)
+
+
+def shared_groupby(group_code, values, mask, n_groups: int):
+    if _backend() == "pallas":
+        from repro.kernels.shared_groupby import shared_groupby_pallas
+        return shared_groupby_pallas(group_code, values, mask, n_groups,
+                                     interpret=_interpret())
+    return _ref.shared_groupby_ref(group_code, values, mask, n_groups)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    if _backend() == "pallas":
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      interpret=_interpret())
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)

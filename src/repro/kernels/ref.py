@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dataquery as dq
+
+
+def clockscan_ref(cols, lo, hi, valid):
+    """cols int32[C,T]; lo/hi int32[C,Q]; valid bool[T] -> uint32[T,Q/32]."""
+    C, T = cols.shape
+    ok = jnp.ones((T, lo.shape[1]), bool)
+    for c in range(C):
+        x = cols[c][:, None]
+        ok &= (x >= lo[c][None, :]) & (x <= hi[c][None, :])
+    ok &= valid[:, None]
+    return dq.pack(ok)
+
+
+def bitmask_join_ref(keys_l, mask_l, keys_r, mask_r, valid_r):
+    """Block shared join oracle; right keys UNIQUE among valid rows.
+
+    Returns (rid int32[Tl] (-1 = no match), combined uint32[Tl, W]).
+    """
+    eq = (keys_l[:, None] == keys_r[None, :]) & valid_r[None, :]
+    eqi = eq.astype(jnp.uint32)
+    combined = mask_l & (eqi @ mask_r)
+    rid = jnp.max(jnp.where(eq, jnp.arange(keys_r.shape[0],
+                                           dtype=jnp.int32)[None, :] + 1, 0),
+                  axis=1) - 1
+    return rid, jnp.where((rid >= 0)[:, None], combined, jnp.uint32(0))
+
+
+def shared_groupby_ref(group_code, values, mask, n_groups: int):
+    """-> (count f32[G, Q], sum f32[G, Q]).
+
+    segment_sum formulation — O(T*Q): the semantic oracle and the CPU
+    execution path.  The Pallas kernel computes the same contraction as
+    one-hot matmuls on the MXU (see shared_groupby.py).
+    """
+    bits = dq.unpack(mask).astype(jnp.float32)
+    count = jax.ops.segment_sum(bits, group_code, num_segments=n_groups)
+    ssum = jax.ops.segment_sum(
+        bits * values[:, None].astype(jnp.float32), group_code,
+        num_segments=n_groups)
+    return count, ssum
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Naive softmax attention oracle.
+
+    q: [B, Sq, H, D]; k, v: [B, Sk, KV, D] (GQA); returns [B, Sq, H, D].
+    Decode: pass Sq=1 with causal offset = Sk - 1 implied (q at last pos).
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bqhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(D))
+    qpos = jnp.arange(Sq) + (Sk - Sq)
+    kpos = jnp.arange(Sk)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(ok[None, :, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqhk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """Naive per-timestep Mamba-2 recurrence oracle.
+
+    x:[b,s,h,p] dt:[b,s,h] A:[h] B,C:[b,s,n] -> (y, final_state[b,h,p,n]).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt * A)                         # [b,h]
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bt, dtt, xt)
+        state = state * dA[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Ct, state)
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1), final

@@ -1,0 +1,84 @@
+"""Shared group-by kernel: aggregation as an MXU contraction.
+
+Phase 1 of the paper's shared group-by (§3.4) — grouping the union of all
+queries' tuples — becomes, per (group-tile, row-tile):
+
+  count[G_t, Q] += onehot(group)^T @ unpack(mask)
+  sum  [G_t, Q] += onehot(group)^T @ (unpack(mask) * value)
+
+i.e. "all groups x all queries" aggregation is two dense f32 matmuls per
+tile — exactly what the MXU is built for.  Row tiles are the inner
+(sequential) grid dim so accumulation stays in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_T = 512
+TILE_G = 256
+
+
+def _unpack_bits(mask, qcap):
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (mask[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(mask.shape[0], qcap)
+
+
+def _kernel(group_ref, value_ref, mask_ref, count_ref, sum_ref, *,
+            qcap: int, tile_g: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        count_ref[...] = jnp.zeros_like(count_ref)
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+
+    g0 = pl.program_id(0) * tile_g
+    bits = _unpack_bits(mask_ref[...], qcap).astype(jnp.float32)
+    local = group_ref[...] - g0                      # [Tt]
+    onehot = (local[:, None] ==
+              jnp.arange(tile_g, dtype=jnp.int32)[None, :])
+    onehot = onehot.astype(jnp.float32)              # [Tt, Gt]
+    count_ref[...] += jnp.einsum("tg,tq->gq", onehot, bits)
+    vals = value_ref[...].astype(jnp.float32)[:, None] * bits
+    sum_ref[...] += jnp.einsum("tg,tq->gq", onehot, vals)
+
+
+def shared_groupby_pallas(group_code, values, mask, n_groups: int, *,
+                          interpret: bool = True):
+    T, W = mask.shape
+    Q = W * 32
+    tt = min(TILE_T, T)
+    pad = (-T) % tt
+    if pad:  # arbitrary row counts: padded rows carry empty masks
+        group_code = jnp.pad(group_code, (0, pad))
+        values = jnp.pad(values, (0, pad))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+        T += pad
+    tg = min(TILE_G, n_groups)
+    assert T % tt == 0
+    Gp = -(-n_groups // tg) * tg                     # pad group space
+    kernel = functools.partial(_kernel, qcap=Q, tile_g=tg)
+    count, ssum = pl.pallas_call(
+        kernel,
+        grid=(Gp // tg, T // tt),
+        in_specs=[
+            pl.BlockSpec((tt,), lambda i, j: (j,)),
+            pl.BlockSpec((tt,), lambda i, j: (j,)),
+            pl.BlockSpec((tt, W), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tg, Q), lambda i, j: (i, 0)),
+            pl.BlockSpec((tg, Q), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Gp, Q), jnp.float32),
+            jax.ShapeDtypeStruct((Gp, Q), jnp.float32),
+        ],
+        interpret=interpret,
+    )(group_code, values, mask)
+    return count[:n_groups], ssum[:n_groups]

@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell with ShapeDtypeStruct inputs (no allocation) and record
+
+  * memory_analysis()      — proves the step fits per device,
+  * cost_analysis()        — HLO FLOPs / bytes for the roofline,
+  * the collective schedule parsed from compiled.as_text().
+
+Scan-depth extrapolation: cost_analysis counts a scan body ONCE regardless
+of trip count, so each cell is additionally lowered at depth G=0 (fixed
+costs: embedding, loss, leftover layers) and G=2 (fixed + one body); the
+true total is  m0 + n_groups * (m2 - m0).
+
+Results are cached incrementally in a JSON file; re-runs skip finished
+cells.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both \
+      --out results/dryrun.json
+"""
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config  # noqa: E402
+from repro.launch.mesh import make_axes, make_production_mesh  # noqa: E402
+from repro.models import transformer  # noqa: E402
+from repro.models.registry import get_model  # noqa: E402
+from repro.roofline.analysis import (model_flops, parse_collectives,  # noqa: E402
+                                     roofline_terms)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _reduced(cfg, n_groups: int):
+    """Config whose program has `n_groups` scan groups (same leftovers)."""
+    prog = transformer.build_program(cfg)
+    L = n_groups * len(prog.group) + len(prog.leftover)
+    kw = {"n_layers": L}
+    if cfg.enc_dec:
+        kw["n_enc_layers"] = n_groups
+    return dataclasses.replace(cfg, **kw)
+
+
+def _jit_cell(api, shape, mesh, axes, donate=True):
+    spec_tree = api.input_specs(shape)
+    pspec_tree = api.input_pspecs(shape)
+    pspecs = api.param_specs()
+    b_ok = shape.global_batch % axes.dp_size == 0
+    b = axes.dp if b_ok else None
+    logits_spec = P(b, axes.tp)
+
+    if shape.kind == "train":
+        in_sh = (_named(mesh, pspecs), _named(mesh, api.opt_specs()),
+                 _named(mesh, pspec_tree["batch"]))
+        out_sh = (NamedSharding(mesh, P()), _named(mesh, pspecs),
+                  _named(mesh, api.opt_specs()), NamedSharding(mesh, P()))
+        args = (api.param_shapes(),
+                jax.eval_shape(api.init_opt, api.param_shapes()),
+                spec_tree["batch"])
+        dn = (0, 1) if donate else ()
+    elif shape.kind == "prefill":
+        cap = api.dec_len(shape.seq_len)
+        _, cache_specs = transformer.cache_struct(
+            api.cfg, shape.global_batch, cap, axes,
+            ctx_len=api.ctx_len(shape.seq_len))
+        in_sh = (_named(mesh, pspecs), _named(mesh, pspec_tree["batch"]))
+        out_sh = (NamedSharding(mesh, logits_spec),
+                  _named(mesh, cache_specs))
+        args = (api.param_shapes(), spec_tree["batch"])
+        dn = ()
+    else:
+        in_sh = (_named(mesh, pspecs), _named(mesh, pspec_tree["caches"]),
+                 _named(mesh, pspec_tree["tokens"]),
+                 _named(mesh, pspec_tree["positions"]))
+        out_sh = (NamedSharding(mesh, logits_spec),
+                  _named(mesh, pspec_tree["caches"]))
+        args = (api.param_shapes(), spec_tree["caches"],
+                spec_tree["tokens"], spec_tree["positions"])
+        dn = (1,) if donate else ()
+
+    fn = jax.jit(api.step_fn(shape), in_shardings=in_sh,
+                 out_shardings=out_sh, donate_argnums=dn)
+    return fn, args
+
+
+def lower_cell(arch: str, shape_name: str, mesh, multi_pod: bool):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    axes = make_axes(mesh)
+    api = get_model(cfg, axes)
+    fn, args = _jit_cell(api, shape, mesh, axes)
+    lowered = fn.lower(*args)
+    return lowered, api, shape
+
+
+def analyse_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
+                 extrapolate: bool = True, overrides: dict = None,
+                 fsdp: str = "data"):
+    t0 = time.time()
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    axes = make_axes(mesh)
+    if fsdp == "none":
+        axes = dataclasses.replace(axes, fsdp=None)
+    n_chips = 512 if multi_pod else 256
+
+    def measure(cfg_x):
+        api = get_model(cfg_x, axes)
+        fn, args = _jit_cell(api, shape, mesh, axes)
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        coll = parse_collectives(compiled.as_text())
+        return compiled, ca, coll
+
+    # full-depth compile: memory analysis + proof the cell lowers/compiles
+    compiled, ca_full, coll_full = measure(cfg)
+    ma = compiled.memory_analysis()
+    full_groups = transformer.build_program(cfg).n_groups
+
+    def pick(ca, key):
+        return float(ca.get(key, 0.0))
+
+    if extrapolate and full_groups >= 2:
+        _, ca0, coll0 = measure(_reduced(cfg, 0))
+        _, ca2, coll2 = measure(_reduced(cfg, 2))
+
+        def extr(v0, v2):
+            body = (v2 - v0) / 2.0  # per scan group
+            return v0 + full_groups * body, body
+
+        # cost_analysis is per-device (per-partition module): x n_chips
+        flops, per_group_flops = extr(pick(ca0, "flops"),
+                                      pick(ca2, "flops"))
+        flops *= n_chips
+        per_group_flops *= n_chips
+        bytes_acc, _ = extr(pick(ca0, "bytes accessed"),
+                            pick(ca2, "bytes accessed"))
+        bytes_acc *= n_chips
+        link_traffic, _ = extr(float(coll0["total_link_traffic"]),
+                               float(coll2["total_link_traffic"]))
+    else:
+        flops = pick(ca_full, "flops") * n_chips
+        bytes_acc = pick(ca_full, "bytes accessed") * n_chips
+        link_traffic = float(coll_full["total_link_traffic"])
+        per_group_flops = 0.0
+
+    coll_bytes = link_traffic * n_chips  # global bytes crossing links
+    terms = roofline_terms(flops, bytes_acc, coll_bytes, n_chips)
+    mf = model_flops(cfg, shape)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_chips": n_chips,
+        "status": "ok",
+        "memory": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "alias_bytes_per_device": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_acc,
+        "collective_bytes": coll_bytes,
+        "collectives": coll_full,
+        "per_group_flops": per_group_flops,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / flops) if flops else 0.0,
+        "roofline": terms,
+        "wall_s": round(time.time() - t0, 2),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["both", "single", "multi"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    help="config override key=value (perf variants)")
+    ap.add_argument("--fsdp", default="data", choices=["data", "none"],
+                    help="none = TP-only weights (inference sharding)")
+    ap.add_argument("--tag", default="",
+                    help="variant tag appended to result keys")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.overrides:
+        k, v = kv.split("=", 1)
+        overrides[k] = v
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"both": [False, True], "single": [False],
+              "multi": [True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    mesh_cache = {}
+    for multi in meshes:
+        mesh_cache[multi] = make_production_mesh(multi_pod=multi)
+
+    for multi in meshes:
+        mesh = mesh_cache[multi]
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape_name in shapes:
+                key = f"{arch}|{shape_name}|{mesh_name}"
+                if args.tag:
+                    key += f"|{args.tag}"
+                if key in results and results[key].get("status") in (
+                        "ok", "skipped") and not args.force:
+                    continue
+                if not cfg.supports(shape_name):
+                    results[key] = {
+                        "arch": arch, "shape": shape_name,
+                        "mesh": mesh_name, "status": "skipped",
+                        "reason": cfg.skip_reason}
+                    print(f"SKIP {key}: {cfg.skip_reason[:60]}", flush=True)
+                else:
+                    try:
+                        rec = analyse_cell(
+                            arch, shape_name, mesh, multi,
+                            extrapolate=not args.no_extrapolate,
+                            overrides=overrides, fsdp=args.fsdp)
+                        if args.tag:
+                            rec["variant"] = args.tag
+                        results[key] = rec
+                        r = rec["roofline"]
+                        print(f"OK   {key}: dom={r['dominant']} "
+                              f"frac={r['roofline_fraction']:.3f} "
+                              f"step={r['step_time_s']:.4f}s "
+                              f"({rec['wall_s']}s)", flush=True)
+                    except Exception as e:  # noqa: BLE001
+                        results[key] = {
+                            "arch": arch, "shape": shape_name,
+                            "mesh": mesh_name, "status": "error",
+                            "error": f"{type(e).__name__}: {e}"}
+                        print(f"FAIL {key}: {type(e).__name__}: {e}",
+                              flush=True)
+                        traceback.print_exc(limit=4)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    n_skip = sum(1 for v in results.values() if v.get("status") == "skipped")
+    n_err = sum(1 for v in results.values() if v.get("status") == "error")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors", flush=True)
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,61 @@
+"""Serving launcher: SharedDB-cycle LM serving with batched requests.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
+      --requests 32 --capacity 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.launch.mesh import make_axes, make_production_mesh
+from repro.serving import CycleServer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--capacity", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--prefill-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = None if args.mesh == "none" else make_production_mesh(
+        multi_pod=args.mesh == "multi")
+    axes = make_axes(mesh)
+    server = CycleServer(cfg, axes, capacity=args.capacity,
+                         max_seq=args.max_seq,
+                         prefill_len=args.prefill_len, seed=args.seed)
+
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for _ in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab, args.prefill_len).tolist()
+        server.submit(prompt, max_new_tokens=args.new_tokens)
+    done = server.run_until_drained()
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in done)
+    lats = [r.done_time - r.arrival for r in done]
+    ftl = [r.first_token_time - r.arrival for r in done]
+    print(f"arch={cfg.name} requests={len(done)} cycles={server.cycles} "
+          f"tokens={toks}")
+    print(f"throughput: {toks/dt:.1f} tok/s | {len(done)/dt:.2f} req/s")
+    print(f"latency p50={np.percentile(lats,50)*1e3:.0f}ms "
+          f"p99={np.percentile(lats,99)*1e3:.0f}ms | first-token "
+          f"p50={np.percentile(ftl,50)*1e3:.0f}ms")
+    assert all(len(r.output) == args.new_tokens for r in done)
+    return done
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Training launcher.
+
+CPU-scale usage (smoke config, real steps):
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+      --smoke --steps 30 --batch 8 --seq 64 --ckpt /tmp/ckpt
+
+Production usage is the same entrypoint with --mesh single|multi (the
+dry-run proves every (arch x shape x mesh) lowers; this driver is what a
+real cluster job would exec per host).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, smoke_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch.mesh import make_axes, make_production_mesh
+from repro.models.registry import get_model
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import FaultTolerantLoop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--save-every", type=int, default=10)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = None if args.mesh == "none" else make_production_mesh(
+        multi_pod=args.mesh == "multi")
+    axes = make_axes(mesh)
+    api = get_model(cfg, axes, AdamWConfig(lr=args.lr))
+
+    dcfg = DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        seed=args.seed,
+        frames_dim=cfg.d_model if cfg.enc_dec else 0,
+        frames_len=args.seq * cfg.dec_ratio if cfg.enc_dec else 0,
+        vision_tokens=cfg.n_vision_tokens if cfg.cross_every else 0,
+        vision_dim=cfg.d_model if cfg.cross_every else 0)
+    pipe = TokenPipeline(dcfg)
+
+    params = api.init_params(jax.random.PRNGKey(args.seed))
+    opt = api.init_opt(params)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M "
+          f"mesh={args.mesh}", flush=True)
+
+    jit_step = jax.jit(api.train_step, donate_argnums=(0, 1))
+
+    def to_dev(b):
+        cast = {k: jnp.asarray(v, jnp.bfloat16 if v.dtype == np.float32
+                               else v.dtype) for k, v in b.items()}
+        return cast
+
+    def step_fn(state, step):
+        # restored checkpoints arrive as host numpy: re-commit to device
+        # (no-op for arrays already on device; donation requires jax.Array)
+        params, opt = jax.tree.map(jnp.asarray, state)
+        batch = to_dev(pipe.batch_at(step))
+        loss, params, opt, gnorm = jit_step(params, opt, batch)
+        return (params, opt), {"step": step, "loss": float(loss),
+                               "gnorm": float(gnorm)}
+
+    state = (params, opt)
+    t0 = time.time()
+    if args.ckpt:
+        ckpt = CheckpointManager(args.ckpt)
+        loop = FaultTolerantLoop(step_fn, ckpt,
+                                 save_every=args.save_every)
+        start = ckpt.latest_step() or 0
+        if start:
+            state, manifest = ckpt.restore(state, start)
+            print(f"resumed from step {start}", flush=True)
+        state, log = loop.run(state, start, args.steps - start)
+    else:
+        log = []
+        for s in range(args.steps):
+            state, m = step_fn(state, s)
+            log.append(m)
+    for m in log:
+        if m["step"] % max(1, args.steps // 10) == 0 \
+                or m["step"] == args.steps - 1:
+            print(f"step {m['step']:5d} loss {m['loss']:.4f} "
+                  f"gnorm {m['gnorm']:.3f}", flush=True)
+    dt = time.time() - t0
+    if log:
+        first, last = log[0]["loss"], log[-1]["loss"]
+        print(f"done: loss {first:.4f} -> {last:.4f} "
+              f"({args.steps} steps, {dt:.1f}s)", flush=True)
+    pipe.stop()
+    return log
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures as pure-functional JAX modules.
+
+Entry point: :func:`repro.models.registry.get_model`.
+"""
+from repro.models.registry import get_model  # noqa: F401

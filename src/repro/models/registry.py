@@ -1,0 +1,171 @@
+"""Model registry: one uniform API over every assigned architecture.
+
+``get_model(cfg)`` returns a :class:`ModelApi` whose members are plain
+functions suitable for ``jax.jit`` / AOT ``.lower().compile()``:
+
+  train_step(params, opt_state, batch)        -> (loss, params, opt_state)
+  prefill(params, batch)                      -> (last_logits, cache)
+  decode_step(params, cache, tokens, pos)     -> (logits, cache)
+
+plus the analytic machinery the dry-run needs: ``input_specs`` (weak-type
+correct ShapeDtypeStructs, no allocation), ``param_specs`` / shardings, and
+``cache_struct``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.models import transformer
+from repro.models.common import MeshAxes
+from repro.optim import adamw_init, adamw_update, opt_state_specs
+from repro.optim.adamw import AdamWConfig
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ArchConfig
+    axes: MeshAxes
+    opt_cfg: AdamWConfig
+
+    # ---------------- parameters -------------------------------------
+    def init_params(self, key):
+        params, _ = transformer.init_lm(key, self.cfg, self.axes)
+        return params
+
+    def _shapes_and_specs(self):
+        captured = {}
+
+        def f(k):
+            params, specs = transformer.init_lm(k, self.cfg, self.axes)
+            captured.update(specs)  # specs are plain python, trace-time
+            return params
+
+        shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return shapes, captured
+
+    def param_specs(self):
+        return self._shapes_and_specs()[1]
+
+    def param_shapes(self):
+        return self._shapes_and_specs()[0]
+
+    def init_opt(self, params):
+        return adamw_init(params)
+
+    def opt_specs(self):
+        return opt_state_specs(self.param_specs())
+
+    # ---------------- steps ------------------------------------------
+    def loss(self, params, batch):
+        return transformer.loss_fn(params, batch, self.cfg, self.axes)
+
+    def train_step(self, params, opt_state, batch):
+        loss, grads = jax.value_and_grad(self.loss)(params, batch)
+        params, opt_state, gnorm = adamw_update(
+            params, grads, opt_state, self.opt_cfg)
+        return loss, params, opt_state, gnorm
+
+    def prefill(self, params, batch, cache_capacity: Optional[int] = None):
+        return transformer.prefill(params, batch, self.cfg, self.axes,
+                                   cache_capacity)
+
+    def decode_step(self, params, caches, tokens, positions):
+        return transformer.decode_step(params, caches, tokens, positions,
+                                       self.cfg, self.axes)
+
+    # ---------------- analytic specs for the dry-run ------------------
+    def ctx_len(self, seq_len: int) -> int:
+        if self.cfg.enc_dec:
+            return seq_len
+        if self.cfg.cross_every:
+            return self.cfg.n_vision_tokens
+        return 0
+
+    def dec_len(self, seq_len: int) -> int:
+        if self.cfg.enc_dec:
+            return max(self.cfg.conv_kernel,
+                       seq_len // self.cfg.dec_ratio)
+        return seq_len
+
+    def input_specs(self, shape: ShapeSpec):
+        """ShapeDtypeStructs for one step of the given shape (no alloc)."""
+        cfg, B, S = self.cfg, shape.global_batch, shape.seq_len
+        d = cfg.d_model
+        tok = lambda s: jax.ShapeDtypeStruct((B, s), jnp.int32)  # noqa: E731
+        if shape.kind == "train":
+            Sd = self.dec_len(S)
+            batch = {"tokens": tok(Sd), "labels": tok(Sd)}
+            if cfg.enc_dec:
+                batch["frames"] = jax.ShapeDtypeStruct((B, S, d),
+                                                       jnp.bfloat16)
+            if cfg.cross_every:
+                batch["vision"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_vision_tokens, d), jnp.bfloat16)
+            return {"batch": batch}
+        if shape.kind == "prefill":
+            Sd = self.dec_len(S)
+            batch = {"tokens": tok(Sd)}
+            if cfg.enc_dec:
+                batch["frames"] = jax.ShapeDtypeStruct((B, S, d),
+                                                       jnp.bfloat16)
+            if cfg.cross_every:
+                batch["vision"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_vision_tokens, d), jnp.bfloat16)
+            return {"batch": batch}
+        # decode: one new token against a cache of seq_len
+        cap = self.dec_len(S)
+        cache, _ = transformer.cache_struct(
+            cfg, B, cap, self.axes, ctx_len=self.ctx_len(S))
+        return {"caches": cache,
+                "tokens": tok(1),
+                "positions": jax.ShapeDtypeStruct((B,), jnp.int32)}
+
+    def input_pspecs(self, shape: ShapeSpec):
+        """PartitionSpecs matching input_specs."""
+        cfg, B = self.cfg, shape.global_batch
+        batch_ok = self.axes.mesh is None or B % self.axes.dp_size == 0
+        b = self.axes.dp if batch_ok else None
+        if shape.kind in ("train", "prefill"):
+            batch = {"tokens": P(b, None)}
+            if shape.kind == "train":
+                batch["labels"] = P(b, None)
+            if cfg.enc_dec:
+                batch["frames"] = P(b, None, None)
+            if cfg.cross_every:
+                batch["vision"] = P(b, None, None)
+            return {"batch": batch}
+        _, cache_specs = transformer.cache_struct(
+            cfg, B, self.dec_len(shape.seq_len), self.axes,
+            ctx_len=self.ctx_len(shape.seq_len))
+        return {"caches": cache_specs,
+                "tokens": P(b, None),
+                "positions": P(b)}
+
+    def step_fn(self, shape: ShapeSpec) -> Callable:
+        """The function the dry-run lowers for this shape."""
+        if shape.kind == "train":
+            def fn(params, opt_state, batch):
+                return self.train_step(params, opt_state, batch)
+            return fn
+        if shape.kind == "prefill":
+            def fn(params, batch):
+                return self.prefill(params, batch,
+                                    cache_capacity=self.dec_len(
+                                        shape.seq_len))
+            return fn
+
+        def fn(params, caches, tokens, positions):
+            return self.decode_step(params, caches, tokens, positions)
+        return fn
+
+
+def get_model(cfg: ArchConfig, axes: MeshAxes = MeshAxes(),
+              opt_cfg: AdamWConfig = AdamWConfig()) -> ModelApi:
+    return ModelApi(cfg=cfg, axes=axes, opt_cfg=opt_cfg)

@@ -1,0 +1,87 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block (arXiv:2402.19427).
+
+Train path: associative scan over the gated linear recurrence
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * r_t),  r/i input-dependent gates.
+Decode path: single-step update with O(d) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import MeshAxes, ParamStore
+from repro.models.ssm import _causal_conv
+
+_C = 8.0
+
+
+_N_BLOCKS = 16  # Griffin uses block-diagonal gate projections; 16 blocks
+                # aligns the block axis with the tensor-parallel axis.
+
+
+def init_rglru(store: ParamStore, cfg, axes: MeshAxes):
+    d = cfg.d_model
+    dr = d  # lru width = d_model in recurrentgemma-2b
+    nb = _N_BLOCKS if dr % _N_BLOCKS == 0 else 1
+    c = dr // nb
+    store.add("w_x", (d, dr), (axes.fsdp, axes.tp))
+    store.add("w_gate", (d, dr), (axes.fsdp, axes.tp))
+    store.add("conv_w", (cfg.conv_kernel, dr), (None, axes.tp), scale=0.5)
+    store.add("conv_b", (dr,), (axes.tp,), zeros=True)
+    store.add("w_a_gate", (nb, c, c), (axes.tp, None, None), scale=0.02)
+    store.add("b_a_gate", (dr,), (axes.tp,), zeros=True)
+    store.add("w_i_gate", (nb, c, c), (axes.tp, None, None), scale=0.02)
+    store.add("b_i_gate", (dr,), (axes.tp,), zeros=True)
+    store.add("lam", (dr,), (axes.tp,), scale=1.0, dtype=jnp.float32)
+    store.add("w_out", (dr, d), (axes.tp, axes.fsdp))
+
+
+def _block_linear(x, w):
+    """x: [B,S,dr], w: [nb,c,c] block-diagonal -> [B,S,dr]."""
+    B, S, dr = x.shape
+    nb, c, _ = w.shape
+    xb = x.reshape(B, S, nb, c)
+    return jnp.einsum("bsnc,nck->bsnk", xb, w).reshape(B, S, dr)
+
+
+def _lru_scan(a, u):
+    """h_t = a_t h_{t-1} + u_t via associative scan; a,u: [B,S,C] f32."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h
+
+
+def apply_rglru(p, x, cfg, axes: MeshAxes, conv_state=None, h_state=None,
+                decode: bool = False):
+    """x: [B,S,D] -> ([B,S,D], (conv_state, h_state))."""
+    xb = x @ p["w_x"]
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xb, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_state)
+    xb = axes.constrain(xb, axes.dp, None, axes.tp)
+
+    xf = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_linear(xf, p["w_a_gate"].astype(jnp.float32))
+                       + p["b_a_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_linear(xf, p["w_i_gate"].astype(jnp.float32))
+                       + p["b_i_gate"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # [B,S,C] f32
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+
+    if decode:
+        h0 = jnp.zeros_like(gated_in[:, 0]) if h_state is None else h_state
+        h = a[:, 0] * h0 + gated_in[:, 0]
+        new_h = h
+        y = h[:, None]
+    else:
+        if h_state is not None:
+            gated_in = gated_in.at[:, 0].add(a[:, 0] * h_state)
+        y = _lru_scan(a, gated_in)
+        new_h = y[:, -1]
+
+    out = (y.astype(x.dtype) * gate) @ p["w_out"]
+    return out, (new_conv, new_h)

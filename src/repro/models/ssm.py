@@ -1,0 +1,170 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Training path uses the chunked SSD algorithm from arXiv:2405.21060 — the
+quadratic intra-chunk part is dense matmuls (MXU-friendly), the inter-chunk
+part is a length-S/Q linear recurrence.  Decode is the O(1)-state recurrent
+step.  A naive per-timestep recurrence lives in kernels/ref.py as the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import MeshAxes, ParamStore
+
+
+def init_ssm(store: ParamStore, cfg, axes: MeshAxes):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    nh = d_in // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    conv_dim = d_in + 2 * n
+    store.add("w_in_zx", (d, 2 * d_in), (axes.fsdp, axes.tp))
+    store.add("w_in_bc", (d, 2 * n), (axes.fsdp, None))
+    store.add("w_in_dt", (d, nh), (axes.fsdp, None))
+    store.add("conv_w", (cfg.conv_kernel, conv_dim), (None, None), scale=0.5)
+    store.add("conv_b", (conv_dim,), (None,), zeros=True)
+    store.add("A_log", (nh,), (None,), scale=0.0, dtype=jnp.float32)
+    store.add("dt_bias", (nh,), (None,), zeros=True, dtype=jnp.float32)
+    store.add("D", (nh,), (None,), zeros=True, dtype=jnp.float32)
+    store.add("norm_scale", (d_in,), (axes.tp,), zeros=True)
+    store.add("w_out", (d_in, d), (axes.tp, axes.fsdp))
+
+
+def _causal_conv(u, w, b, state=None):
+    """Depthwise causal conv, width K.  u: [B,S,C]; w: [K,C].
+
+    state: [B, K-1, C] trailing context for decode; returns (y, new_state).
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(u.shape[:1] + (K - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    y = sum(jax.lax.slice_in_dim(full, i, i + u.shape[1], axis=1)
+            * w[i].astype(u.dtype) for i in range(K))
+    new_state = jax.lax.slice_in_dim(full, full.shape[1] - (K - 1),
+                                     full.shape[1], axis=1)
+    return y + b.astype(u.dtype), new_state
+
+
+def _segsum(a):
+    """a: [..., Q] -> [..., Q, Q] lower-tri pairwise sums a[j+1..i]."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """SSD scan.  x:[b,s,h,p] dt:[b,s,h] A:[h] B,C:[b,s,n].
+
+    Returns (y [b,s,h,p], final_state [b,h,p,n]).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    Q = min(chunk, s)
+    assert s % Q == 0, f"seq {s} not divisible by chunk {Q}"
+    nc = s // Q
+
+    dA = dt * A  # [b,s,h], negative log-decay per step
+    xs = (x * dt[..., None]).reshape(b, nc, Q, h, p)
+    dA = dA.reshape(b, nc, Q, h)
+    Bc = B.reshape(b, nc, Q, n)
+    Cc = C.reshape(b, nc, Q, n)
+
+    dA_cs = jnp.cumsum(dA, axis=2)                      # [b,nc,Q,h]
+
+    # 1. intra-chunk (diagonal blocks): quadratic in Q, matmul-shaped
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, 3, 2)))        # [b,nc,h,Q,Q]
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp",
+                        scores, L.astype(scores.dtype), xs)
+
+    # 2. per-chunk end states
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # [b,nc,Q,h]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                        Bc, decay_to_end.astype(Bc.dtype), xs)
+
+    # 3. inter-chunk linear recurrence over nc chunks
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])            # [b,nc,h]
+    s0 = (jnp.zeros((b, h, p, n), x.dtype) if init_state is None
+          else init_state.astype(x.dtype))
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None].astype(carry.dtype) + st
+        return new, carry  # emit state *entering* the chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # [b,nc,h,p,n]
+
+    # 4. inter-chunk contribution
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                       Cc, prev_states, jnp.exp(dA_cs).astype(Cc.dtype))
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def apply_ssm(p, x, cfg, axes: MeshAxes, conv_state=None, ssd_state=None,
+              decode: bool = False):
+    """Mamba-2 block.  x: [B,S,D] -> ([B,S,D], (conv_state, ssd_state))."""
+    B_, S, D = x.shape
+    d_in = cfg.ssm_expand * D
+    nh = d_in // cfg.ssm_head_dim
+    hd = cfg.ssm_head_dim
+    n = cfg.ssm_state
+
+    zx = x @ p["w_in_zx"]
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = x @ p["w_in_bc"]
+    dt = jax.nn.softplus((x @ p["w_in_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])
+
+    u = jnp.concatenate([xin, bc], axis=-1)
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    u = jax.nn.silu(u)
+    xin, Bmat, Cmat = jnp.split(u, [d_in, d_in + n], axis=-1)
+    xin = axes.constrain(xin, axes.dp, None, axes.tp)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B_, S, nh, hd).astype(jnp.float32)
+    Bf = Bmat.astype(jnp.float32)
+    Cf = Cmat.astype(jnp.float32)
+
+    if decode:
+        # single step: state <- exp(dt*A)*state + dt*B (x) x
+        st = jnp.zeros((B_, nh, hd, n), jnp.float32) if ssd_state is None \
+            else ssd_state
+        dA = jnp.exp(dt[:, 0] * A)                       # [B,h]
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bf[:, 0], dt[:, 0], xh[:, 0])
+        st = st * dA[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cf[:, 0], st)[:, None]
+        new_state = st
+    else:
+        # pad S to the chunk size; padded steps carry dt=0 (identity
+        # transition: no decay, no input) so the final state is exact
+        Q = min(cfg.ssm_chunk, max(S, 1))
+        pad = (-S) % Q
+        xp, Bp, Cp, dtp = xh, Bf, Cf, dt
+        if pad:
+            zf = lambda a: jnp.pad(  # noqa: E731
+                a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+            xp, Bp, Cp, dtp = zf(xh), zf(Bf), zf(Cf), zf(dt)
+        y, new_state = ssd_chunked(xp, dtp, A, Bp, Cp, Q, ssd_state)
+        if pad:
+            y = y[:, :S]
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(B_, S, d_in).astype(x.dtype)
+
+    # gated RMSNorm then out-projection
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    gf = gf * jax.lax.rsqrt(jnp.mean(gf * gf, -1, keepdims=True) + 1e-6)
+    g = (gf * (1.0 + p["norm_scale"].astype(jnp.float32))).astype(x.dtype)
+    out = g @ p["w_out"]
+    return out, (new_conv, new_state)

@@ -1,0 +1,597 @@
+"""Unified grouped-scan language model.
+
+Every assigned architecture compiles to a *layer program*: a repeated group
+of sublayers scanned ``n_groups`` times (jax.lax.scan over stacked params,
+O(1) HLO size in depth) plus optional leftover sublayers.  This uniformly
+expresses:
+
+  dense GQA           group = [attn]                          x L
+  mixtral (SWA MoE)   group = [attn(window, moe)]             x L
+  gemma3 (5:1)        group = [attn(w)]*5 + [attn(0)]         x 10  + 2 local
+  llama-vision        group = [attn]*4 + [cross]              x 20
+  recurrentgemma      group = [rec, rec, attn(w)]             x 8   + 2 rec
+  mamba2              group = [ssm]                           x 48
+  whisper             encoder program + decoder program (self+cross)
+
+Each sublayer owns its pre-norm and (except bare ssm/rec) a gated MLP.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig
+from repro.models import moe as moe_lib
+from repro.models import rglru, ssm
+from repro.models.common import (MeshAxes, ParamStore, apply_norm,
+                                 apply_rope, block_attention,
+                                 decode_attention, rope_tables)
+
+
+# ---------------------------------------------------------------------------
+# Layer programs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str               # attn | cross | rec | ssm
+    window: int = 0         # 0 = full attention
+    causal: bool = True
+    moe: bool = False
+    has_mlp: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    n_groups: int
+    group: Tuple[LayerSpec, ...]
+    leftover: Tuple[LayerSpec, ...] = ()
+
+    @property
+    def n_layers(self) -> int:
+        return self.n_groups * len(self.group) + len(self.leftover)
+
+
+def build_program(cfg: ArchConfig) -> Program:
+    if cfg.enc_dec:
+        return build_decoder_program(cfg)
+    if cfg.family == "ssm":
+        return Program(cfg.n_layers, (LayerSpec("ssm", has_mlp=False),))
+    if cfg.rglru_pattern:
+        kinds = {"rec": LayerSpec("rec", window=0),
+                 "attn": LayerSpec("attn", window=cfg.window)}
+        group = tuple(kinds[k] for k in cfg.rglru_pattern)
+        n = cfg.n_layers // len(group)
+        rest = cfg.n_layers - n * len(group)
+        leftover = tuple(kinds[k] for k in cfg.rglru_pattern[:rest])
+        return Program(n, group, leftover)
+    if cfg.cross_every:
+        per = cfg.cross_every
+        group = tuple([LayerSpec("attn", moe=cfg.moe is not None)] * (per - 1)
+                      + [LayerSpec("cross")])
+        assert cfg.n_layers % per == 0
+        return Program(cfg.n_layers // per, group)
+    loc, glob = cfg.local_global
+    is_moe = cfg.moe is not None
+    if loc > 0 and glob > 0:
+        group = tuple([LayerSpec("attn", window=cfg.window, moe=is_moe)] * loc
+                      + [LayerSpec("attn", window=0, moe=is_moe)] * glob)
+        per = loc + glob
+        n = cfg.n_layers // per
+        rest = cfg.n_layers - n * per
+        leftover = tuple([LayerSpec("attn", window=cfg.window,
+                                    moe=is_moe)] * rest)
+        return Program(n, group, leftover)
+    return Program(cfg.n_layers,
+                   (LayerSpec("attn", window=cfg.window, moe=is_moe),))
+
+
+def build_encoder_program(cfg: ArchConfig) -> Program:
+    return Program(cfg.n_enc_layers, (LayerSpec("attn", causal=False),))
+
+
+def build_decoder_program(cfg: ArchConfig) -> Program:
+    # enc-dec decoder layer: self-attn sublayer (no MLP) + cross-attn + MLP
+    return Program(cfg.n_layers,
+                   (LayerSpec("attn", has_mlp=False), LayerSpec("cross")))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _head_specs(cfg: ArchConfig, axes: MeshAxes):
+    tp = axes.tp_size
+    h_spec = axes.tp if cfg.n_heads % max(tp, 1) == 0 else None
+    kv_spec = axes.tp if cfg.n_kv % max(tp, 1) == 0 else None
+    return h_spec, kv_spec
+
+
+def _init_norm(store: ParamStore, name: str, d: int, kind: str,
+               axes: MeshAxes):
+    sub = store.subtree(name)
+    sub.add("scale", (d,), (None,), zeros=(kind == "rmsnorm"))
+    if kind != "rmsnorm":
+        sub.add("bias", (d,), (None,), zeros=True)
+
+
+def _init_attn(store: ParamStore, cfg: ArchConfig, axes: MeshAxes):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h_spec, kv_spec = _head_specs(cfg, axes)
+    store.add("wq", (d, cfg.n_heads, hd), (axes.fsdp, h_spec, None))
+    store.add("wk", (d, cfg.n_kv, hd), (axes.fsdp, kv_spec, None))
+    store.add("wv", (d, cfg.n_kv, hd), (axes.fsdp, kv_spec, None))
+    store.add("wo", (cfg.n_heads, hd, d), (h_spec, None, axes.fsdp))
+    if cfg.qkv_bias:
+        store.add("bq", (cfg.n_heads, hd), (h_spec, None), zeros=True)
+        store.add("bk", (cfg.n_kv, hd), (kv_spec, None), zeros=True)
+        store.add("bv", (cfg.n_kv, hd), (kv_spec, None), zeros=True)
+
+
+def _init_sublayer(store: ParamStore, spec: LayerSpec, cfg: ArchConfig,
+                   axes: MeshAxes):
+    _init_norm(store, "norm", cfg.d_model, cfg.norm, axes)
+    if spec.kind in ("attn", "cross"):
+        _init_attn(store.subtree("attn"), cfg, axes)
+    elif spec.kind == "rec":
+        rglru.init_rglru(store.subtree("rec"), cfg, axes)
+    elif spec.kind == "ssm":
+        ssm.init_ssm(store.subtree("ssm"), cfg, axes)
+    if spec.has_mlp:
+        _init_norm(store, "mlp_norm", cfg.d_model, cfg.norm, axes)
+        mstore = store.subtree("mlp")
+        if spec.moe:
+            moe_lib.init_moe(mstore, cfg.d_model, cfg.moe, axes)
+        elif cfg.act in ("swiglu", "gelu_glu"):
+            moe_lib.init_mlp(mstore, cfg.d_model, cfg.d_ff, axes)
+        else:
+            moe_lib.init_mlp_nonglu(mstore, cfg.d_model, cfg.d_ff, axes)
+
+
+def _init_program(store: ParamStore, prog: Program, cfg: ArchConfig,
+                  axes: MeshAxes, prefix: str):
+    from repro.models.common import stack_trees, stack_specs
+    for idx, spec in enumerate(prog.group):
+        if prog.n_groups == 0:
+            break
+        copies, copy_specs = [], None
+        for g in range(prog.n_groups):
+            sub = ParamStore(jax.random.fold_in(store._next_key(), g),
+                             store.dtype)
+            _init_sublayer(sub, spec, cfg, axes)
+            copies.append(sub.params)
+            copy_specs = sub.specs
+        store.params[f"{prefix}g{idx}"] = stack_trees(copies)
+        store.specs[f"{prefix}g{idx}"] = stack_specs(copy_specs)
+    for idx, spec in enumerate(prog.leftover):
+        sub = store.subtree(f"{prefix}x{idx}")
+        _init_sublayer(sub, spec, cfg, axes)
+
+
+def init_lm(key, cfg: ArchConfig, axes: MeshAxes = MeshAxes(),
+            dtype=jnp.bfloat16):
+    """Returns (params, pspecs) — parallel pytrees."""
+    store = ParamStore(key, dtype)
+    Vp = cfg.vocab_padded()
+    store.add("embed", (Vp, cfg.d_model), (axes.tp, axes.fsdp), scale=0.02)
+    if not cfg.tie_embeddings:
+        store.add("unembed", (cfg.d_model, Vp), (axes.fsdp, axes.tp),
+                  scale=0.02)
+    _init_norm(store, "final_norm", cfg.d_model, cfg.norm, axes)
+    prog = build_program(cfg)
+    _init_program(store, prog, cfg, axes, "")
+    if cfg.enc_dec:
+        store.add("w_frontend", (cfg.d_model, cfg.d_model),
+                  (axes.fsdp, None))
+        _init_norm(store, "enc_final_norm", cfg.d_model, cfg.norm, axes)
+        _init_program(store, build_encoder_program(cfg), cfg, axes, "enc_")
+    if cfg.cross_every:
+        store.add("w_vision_proj", (cfg.d_model, cfg.d_model),
+                  (axes.fsdp, None))
+    return store.params, store.specs
+
+
+# ---------------------------------------------------------------------------
+# Sublayer application
+# ---------------------------------------------------------------------------
+
+
+def _qkv(p, x, cfg, ctx=None):
+    """Returns q [B,S,H,hd], k,v [B,Sk,KV,hd]."""
+    src = x if ctx is None else ctx
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def _attn_full(p, x, spec: LayerSpec, cfg, axes, positions, ctx=None):
+    """Train/prefill attention.  Returns (out, (k, v)) — k/v for caching."""
+    q, k, v = _qkv(p, x, cfg, ctx)
+    if ctx is None:  # self-attention: rope
+        sin, cos = rope_tables(positions, cfg.resolved_head_dim,
+                               cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    h_spec, kv_spec = _head_specs(cfg, axes)
+    out = block_attention(q, k, v, causal=spec.causal and ctx is None,
+                          window=spec.window if ctx is None else 0,
+                          axes=axes, head_sharded=h_spec is not None,
+                          kv_sharded=kv_spec is not None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
+
+
+def _attn_decode(p, x, spec: LayerSpec, cfg, axes, cache, positions):
+    """Single-token attention with ring-buffer cache update."""
+    q, k_new, v_new = _qkv(p, x, cfg, None)
+    sin, cos = rope_tables(positions[:, None], cfg.resolved_head_dim,
+                           cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k_new = apply_rope(k_new, sin, cos)
+
+    W = cache["k"].shape[1]
+    slot = positions % W                                    # [B]
+    bidx = jnp.arange(x.shape[0])
+    k_c = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v_c = cache["v"].at[bidx, slot].set(v_new[:, 0])
+    pos_c = cache["pos"].at[bidx, slot].set(positions)
+
+    seq_spec = None
+    if axes.mesh is not None and x.shape[0] % axes.dp_size != 0:
+        seq_spec = axes.dp[-1]  # batch unshardable -> KV seq rides data axis
+    _, kv_spec = _head_specs(cfg, axes)
+    if cfg.decode_cache_seq_shard == "tp" and kv_spec is None:
+        seq_spec = axes.tp      # split-KV across the model axis
+    out = decode_attention(q, k_c, v_c, pos_c, positions,
+                           window=spec.window, axes=axes,
+                           seq_axis_spec=seq_spec)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k_c, "v": v_c, "pos": pos_c}
+
+
+def _cross_decode(p, x, cfg, axes, cache):
+    """Decode-time cross-attention against precomputed (k, v)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    k_c, v_c = cache["k"], cache["v"]
+    pos = jnp.zeros((x.shape[0],), jnp.int32)
+    kv_pos = jnp.zeros(k_c.shape[:2], jnp.int32)  # all valid, no causality
+    out = decode_attention(q, k_c, v_c, kv_pos, pos, axes=axes)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def _apply_mlp_part(p, spec: LayerSpec, x, cfg, axes):
+    if not spec.has_mlp:
+        return x, 0.0
+    h = apply_norm(x, p["mlp_norm"], cfg.norm)
+    if spec.moe:
+        y, aux = moe_lib.apply_moe(p["mlp"], h, cfg.moe, cfg.act, axes,
+                                   dispatch=cfg.moe_dispatch)
+    elif cfg.act in ("swiglu", "gelu_glu"):
+        y, aux = moe_lib.apply_mlp(p["mlp"], h, cfg.act, axes), 0.0
+    else:
+        y, aux = moe_lib.apply_mlp_nonglu(p["mlp"], h, cfg.act, axes), 0.0
+    if cfg.sp_outputs and y.ndim == 3:
+        y = axes.constrain(y, axes.dp, axes.tp, None)
+    return x + y, aux
+
+
+def _sublayer_train(p, spec: LayerSpec, x, cfg, axes, positions, ctx,
+                    emit_cache: bool, cache_capacity: int = 0):
+    """Returns (x, aux, cache_entry_or_None)."""
+    h = apply_norm(x, p["norm"], cfg.norm)
+    entry = None
+    if spec.kind == "attn":
+        y, (k, v) = _attn_full(p["attn"], h, spec, cfg, axes, positions)
+        if emit_cache:
+            entry = _pack_kv_cache(k, v, positions, spec, cache_capacity)
+    elif spec.kind == "cross":
+        y, (k, v) = _attn_full(p["attn"], h, spec, cfg, axes, positions,
+                               ctx=ctx)
+        if emit_cache:
+            entry = {"k": k, "v": v}
+    elif spec.kind == "rec":
+        y, (conv, hstate) = rglru.apply_rglru(p["rec"], h, cfg, axes)
+        if emit_cache:
+            entry = {"conv": conv, "h": hstate}
+    elif spec.kind == "ssm":
+        y, (conv, st) = ssm.apply_ssm(p["ssm"], h, cfg, axes)
+        if emit_cache:
+            entry = {"conv": conv, "state": st}
+    if cfg.sp_outputs:
+        # constrain the sublayer OUTPUT to the seq-sharded layout so the
+        # TP partial-sum reduction lowers as reduce-scatter (Megatron-SP)
+        y = axes.constrain(y, axes.dp, axes.tp, None)
+    x = x + y
+    x = axes.constrain(x, axes.dp, axes.tp, None)  # sequence-sharded residual
+    x, aux = _apply_mlp_part(p, spec, x, cfg, axes)
+    x = axes.constrain(x, axes.dp, axes.tp, None)
+    return x, aux, entry
+
+
+def _pack_kv_cache(k, v, positions, spec: LayerSpec, capacity: int):
+    """Arrange prefill K/V into the ring-buffer layout (slot = pos % W)."""
+    B, S = k.shape[:2]
+    W = min(capacity, spec.window) if spec.window else capacity
+    if S >= W:
+        k_keep = k[:, S - W:]
+        v_keep = v[:, S - W:]
+        pos_keep = jnp.broadcast_to(jnp.arange(S - W, S), (B, W))
+        slots = jnp.arange(S - W, S) % W
+        k_c = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(k_keep)
+        v_c = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(v_keep)
+        pos_c = jnp.full((B, W), -1, jnp.int32).at[:, slots].set(
+            pos_keep.astype(jnp.int32))
+    else:
+        pad = W - S
+        k_c = jnp.pad(k, ((0, 0), (0, pad)) + ((0, 0),) * (k.ndim - 2))
+        v_c = jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 2))
+        pos_c = jnp.concatenate(
+            [jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S)),
+             jnp.full((B, pad), -1, jnp.int32)], axis=1)
+    return {"k": k_c, "v": v_c, "pos": pos_c}
+
+
+def _sublayer_decode(p, spec: LayerSpec, x, cfg, axes, positions, cache):
+    h = apply_norm(x, p["norm"], cfg.norm)
+    if spec.kind == "attn":
+        y, new_cache = _attn_decode(p["attn"], h, spec, cfg, axes, cache,
+                                    positions)
+    elif spec.kind == "cross":
+        y = _cross_decode(p["attn"], h, cfg, axes, cache)
+        new_cache = cache
+    elif spec.kind == "rec":
+        y, (conv, hstate) = rglru.apply_rglru(
+            p["rec"], h, cfg, axes, conv_state=cache["conv"],
+            h_state=cache["h"], decode=True)
+        new_cache = {"conv": conv, "h": hstate}
+    elif spec.kind == "ssm":
+        y, (conv, st) = ssm.apply_ssm(
+            p["ssm"], h, cfg, axes, conv_state=cache["conv"],
+            ssd_state=cache["state"], decode=True)
+        new_cache = {"conv": conv, "state": st}
+    x = x + y
+    x, _ = _apply_mlp_part(p, spec, x, cfg, axes)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model passes
+# ---------------------------------------------------------------------------
+
+
+def _run_program(params, prog: Program, x, cfg, axes, positions, ctx=None,
+                 *, emit_cache=False, cache_capacity=0, remat=True,
+                 prefix=""):
+    """Scan the grouped program.  Returns (x, aux, caches dict or None)."""
+    aux_total = 0.0
+    caches = {} if emit_cache else None
+
+    def group_body(carry, gparams):
+        x, aux = carry
+        entries = {}
+        for idx, spec in enumerate(prog.group):
+            x, a, entry = _sublayer_train(
+                gparams[f"{prefix}g{idx}"], spec, x, cfg, axes, positions,
+                ctx, emit_cache, cache_capacity)
+            aux = aux + a
+            if emit_cache:
+                entries[f"{prefix}g{idx}"] = entry
+        return (x, aux), entries
+
+    body = jax.checkpoint(group_body) if (remat and cfg.remat == "full") \
+        else group_body
+    xs = {k: params[k] for k in params
+          if k.startswith(f"{prefix}g") and k[len(prefix) + 1:].isdigit()}
+    if xs:  # n_groups may be 0 (depth-probe configs)
+        (x, aux_total), stacked_entries = jax.lax.scan(
+            lambda c, gp: body(c, gp), (x, jnp.float32(0.0)), xs)
+        if emit_cache:
+            caches.update(stacked_entries)
+    for idx, spec in enumerate(prog.leftover):
+        x, a, entry = _sublayer_train(
+            params[f"{prefix}x{idx}"], spec, x, cfg, axes, positions, ctx,
+            emit_cache, cache_capacity)
+        aux_total = aux_total + a
+        if emit_cache:
+            caches[f"{prefix}x{idx}"] = entry
+    return x, aux_total, caches
+
+
+def _embed(params, cfg, tokens, axes):
+    x = params["embed"].take(tokens, axis=0)
+    return axes.constrain(x, axes.dp, axes.tp, None)
+
+
+def _unembed(params, cfg, x, axes):
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return axes.constrain(logits, axes.dp, None, axes.tp)
+
+
+def _encode(params, cfg, frames, axes):
+    x = frames @ params["w_frontend"]
+    pos = jnp.arange(frames.shape[1])[None]
+    x, _, _ = _run_program(params, build_encoder_program(cfg), x, cfg, axes,
+                           pos, prefix="enc_")
+    return apply_norm(x, params["enc_final_norm"], cfg.norm)
+
+
+def _get_ctx(params, cfg, batch, axes):
+    if cfg.enc_dec:
+        return _encode(params, cfg, batch["frames"], axes)
+    if cfg.cross_every:
+        return batch["vision"] @ params["w_vision_proj"]
+    return None
+
+
+def loss_fn(params, batch, cfg: ArchConfig, axes: MeshAxes = MeshAxes()):
+    """Causal LM loss (+0.01 * MoE aux).  batch: tokens/labels [B,S] (+aux)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    prog = build_program(cfg)
+    ctx = _get_ctx(params, cfg, batch, axes)
+    x = _embed(params, cfg, tokens, axes)
+    positions = jnp.arange(tokens.shape[1])[None]
+    x, aux, _ = _run_program(params, prog, x, cfg, axes, positions, ctx)
+    logits = _unembed(params, cfg, x, axes).astype(jnp.float32)
+    Vp, V = cfg.vocab_padded(), cfg.vocab
+    if Vp != V:  # mask padded vocab
+        logits = logits + jnp.where(jnp.arange(Vp) < V, 0.0, -1e9)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce + 0.01 * aux
+
+
+def prefill(params, batch, cfg: ArchConfig, axes: MeshAxes = MeshAxes(),
+            cache_capacity: Optional[int] = None):
+    """Run the prompt; returns (last-token logits [B, V], cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cap = cache_capacity or S
+    prog = build_program(cfg)
+    ctx = _get_ctx(params, cfg, batch, axes)
+    x = _embed(params, cfg, tokens, axes)
+    positions = jnp.arange(S)[None]
+    x, _, caches = _run_program(params, prog, x, cfg, axes, positions, ctx,
+                                emit_cache=True, cache_capacity=cap,
+                                remat=False)
+    logits = _unembed(params, cfg, x[:, -1:], axes)
+    return logits[:, 0], caches
+
+
+# ---------------------------------------------------------------------------
+# Cache structure (analytic: ShapeDtypeStructs + PartitionSpecs)
+# ---------------------------------------------------------------------------
+
+
+def cache_struct(cfg: ArchConfig, batch: int, capacity: int,
+                 axes: MeshAxes = MeshAxes(), ctx_len: int = 0,
+                 dtype=jnp.bfloat16):
+    """Decode-cache pytree as (ShapeDtypeStruct tree, PartitionSpec tree).
+
+    capacity: KV slots for full-attention layers (window layers use
+    min(window, capacity)).  ctx_len: encoder / vision context length for
+    cross sublayers.
+    """
+    prog = build_program(cfg)
+    hd = cfg.resolved_head_dim
+    _, kv_spec = _head_specs(cfg, axes)
+    batch_ok = axes.mesh is None or batch % axes.dp_size == 0
+    b_spec = axes.dp if batch_ok else None
+    # batch-1 long-context: shard the KV sequence dim on the data axis
+    s_spec = None if batch_ok else axes.dp[-1]
+
+    if cfg.decode_cache_seq_shard == "tp" and kv_spec is None:
+        # split-KV: kv heads don't divide TP, so the cache SEQUENCE rides
+        # the model axis instead (flash-decoding across devices)
+        s_spec = axes.tp if axes.mesh is not None else None
+        kv_spec = None
+
+    def entry(spec: LayerSpec, stacked: int):
+        lead = (stacked,) if stacked else ()
+        lspec = (None,) if stacked else ()
+        if spec.kind == "attn":
+            W = min(spec.window, capacity) if spec.window else capacity
+            return (
+                {"k": jax.ShapeDtypeStruct(lead + (batch, W, cfg.n_kv, hd),
+                                           dtype),
+                 "v": jax.ShapeDtypeStruct(lead + (batch, W, cfg.n_kv, hd),
+                                           dtype),
+                 "pos": jax.ShapeDtypeStruct(lead + (batch, W), jnp.int32)},
+                {"k": P(*lspec, b_spec, s_spec, kv_spec, None),
+                 "v": P(*lspec, b_spec, s_spec, kv_spec, None),
+                 "pos": P(*lspec, b_spec, s_spec)})
+        if spec.kind == "cross":
+            return (
+                {"k": jax.ShapeDtypeStruct(
+                    lead + (batch, ctx_len, cfg.n_kv, hd), dtype),
+                 "v": jax.ShapeDtypeStruct(
+                    lead + (batch, ctx_len, cfg.n_kv, hd), dtype)},
+                {"k": P(*lspec, b_spec, None, kv_spec, None),
+                 "v": P(*lspec, b_spec, None, kv_spec, None)})
+        if spec.kind == "rec":
+            dr = cfg.d_model
+            return (
+                {"conv": jax.ShapeDtypeStruct(
+                    lead + (batch, cfg.conv_kernel - 1, dr), dtype),
+                 "h": jax.ShapeDtypeStruct(lead + (batch, dr), jnp.float32)},
+                {"conv": P(*lspec, b_spec, None, axes.tp),
+                 "h": P(*lspec, b_spec, axes.tp)})
+        if spec.kind == "ssm":
+            d_in = cfg.ssm_expand * cfg.d_model
+            nh = d_in // cfg.ssm_head_dim
+            conv_dim = d_in + 2 * cfg.ssm_state
+            return (
+                {"conv": jax.ShapeDtypeStruct(
+                    lead + (batch, cfg.conv_kernel - 1, conv_dim), dtype),
+                 "state": jax.ShapeDtypeStruct(
+                    lead + (batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32)},
+                {"conv": P(*lspec, b_spec, None, None),
+                 "state": P(*lspec, b_spec, axes.tp, None, None)})
+        raise ValueError(spec.kind)
+
+    shapes, specs = {}, {}
+    if prog.n_groups > 0:
+        for idx, spec in enumerate(prog.group):
+            shapes[f"g{idx}"], specs[f"g{idx}"] = entry(spec, prog.n_groups)
+    for idx, spec in enumerate(prog.leftover):
+        shapes[f"x{idx}"], specs[f"x{idx}"] = entry(spec, 0)
+    return shapes, specs
+
+
+def init_cache(cfg: ArchConfig, batch: int, capacity: int,
+               axes: MeshAxes = MeshAxes(), ctx_len: int = 0,
+               dtype=jnp.bfloat16):
+    """Zero-initialised decode cache (pos slots = -1 = empty)."""
+    shapes, _ = cache_struct(cfg, batch, capacity, axes, ctx_len, dtype)
+
+    def mk(sd):
+        if sd.dtype == jnp.int32:
+            return jnp.full(sd.shape, -1, jnp.int32)
+        return jnp.zeros(sd.shape, sd.dtype)
+
+    return jax.tree.map(mk, shapes)
+
+
+def decode_step(params, caches, tokens, positions, cfg: ArchConfig,
+                axes: MeshAxes = MeshAxes()):
+    """One token for every sequence.  tokens [B,1], positions [B]."""
+    prog = build_program(cfg)
+    x = _embed(params, cfg, tokens, axes)
+
+    def group_body(x, inp):
+        gparams, gcache = inp
+        new_entries = {}
+        for idx, spec in enumerate(prog.group):
+            key = f"g{idx}"
+            x, new_entries[key] = _sublayer_decode(
+                gparams[key], spec, x, cfg, axes, positions, gcache[key])
+        return x, new_entries
+
+    xs_params = {k: params[k] for k in params
+                 if k.startswith("g") and k[1:].isdigit()}
+    xs_cache = {k: caches[k] for k in caches
+                if k.startswith("g") and k[1:].isdigit()}
+    if xs_params:
+        x, new_caches = jax.lax.scan(group_body, x, (xs_params, xs_cache))
+    else:
+        new_caches = {}
+    for idx, spec in enumerate(prog.leftover):
+        key = f"x{idx}"
+        x, new_caches[key] = _sublayer_decode(
+            params[key], spec, x, cfg, axes, positions, caches[key])
+    logits = _unembed(params, cfg, x, axes)
+    return logits[:, 0], new_caches

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (adamw_init, adamw_update,  # noqa: F401
+                               opt_state_specs)
+from repro.optim.schedules import cosine_schedule  # noqa: F401

@@ -1,0 +1,96 @@
+"""AdamW with f32 moments over bf16 params, plus distributed-training hooks:
+
+* global-norm clipping,
+* optional top-k / sign-based gradient compression (error feedback) for
+  bandwidth-constrained inter-pod links (see runtime/ and EXPERIMENTS.md).
+
+Pure-functional: state is a pytree shaped like the params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    compression: str = "none"   # none | sign (1-bit w/ error feedback)
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    state = {"m": jax.tree.map(zeros, params),
+             "v": jax.tree.map(zeros, params),
+             "step": jnp.zeros((), jnp.int32)}
+    return state
+
+
+def opt_state_specs(param_specs):
+    """Moments shard exactly like their parameters."""
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+def _global_norm(tree):
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def compress_grads(grads, state, cfg: AdamWConfig):
+    """1-bit sign compression with error feedback (arXiv:1802.04434 style).
+
+    Returns (decompressed grads as seen post-all-reduce, new error state).
+    The *lowered* collective then moves sign bits + one scale instead of f32
+    — modeled here functionally; the wire format is the runtime's concern.
+    """
+    if cfg.compression == "none":
+        return grads, state
+    err = state.get("err") or jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                             grads, err)
+    scale = jax.tree.map(lambda c: jnp.mean(jnp.abs(c)), corrected)
+    quant = jax.tree.map(lambda c, s: jnp.sign(c) * s, corrected, scale)
+    new_err = jax.tree.map(lambda c, q: c - q, corrected, quant)
+    state = dict(state)
+    state["err"] = new_err
+    return quant, state
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 lr: Optional[Any] = None):
+    lr = cfg.lr if lr is None else lr
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * clip, grads)
+
+    step = state["step"] + 1
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                         state["m"], grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                         state["v"], grads)
+
+    def upd(p, m, v):
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    new_state = dict(state)
+    new_state.update(m=new_m, v=new_v, step=step)
+    return new_params, new_state, gnorm

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (HW, parse_collectives,  # noqa: F401
+                                     roofline_terms, model_flops)

@@ -1,0 +1,3 @@
+from repro.runtime.fault_tolerance import (FaultTolerantLoop,  # noqa: F401
+                                           StragglerPolicy)
+from repro.runtime.elastic import ElasticMeshManager  # noqa: F401

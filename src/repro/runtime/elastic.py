@@ -1,0 +1,76 @@
+"""Elastic scaling: re-mesh and re-lower when hosts join/leave.
+
+SharedDB's always-on plan is compiled for a fixed mesh; elasticity is
+handled at CYCLE boundaries (never inside a step):
+
+  1. failure/resize detected (heartbeats, scheduler event);
+  2. drain: finish the in-flight cycle, checkpoint (atomic);
+  3. pick the largest supported mesh <= surviving chips from the ladder;
+  4. re-lower the same step functions under the new mesh (pure function of
+     config x mesh — this is exactly what launch/dryrun.py proves compiles
+     for every (arch x shape x mesh));
+  5. restore the checkpoint re-sharded (per-host shards re-read by the new
+     owners) and resume at the saved step.
+
+The mesh ladder keeps axis shapes divisor-friendly so every config in
+repro.configs stays shardable after shrink.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+
+
+# (pods, data, model) ladder — model axis kept at 16 so TP-sharded configs
+# stay valid; shrink sheds data-parallel rows first (batch divisibility is
+# re-checked against the config at selection time).
+DEFAULT_LADDER: List[Tuple[int, ...]] = [
+    (2, 16, 16), (1, 16, 16), (1, 8, 16), (1, 4, 16), (1, 2, 16),
+    (1, 1, 16), (1, 1, 8), (1, 1, 4), (1, 1, 2), (1, 1, 1),
+]
+
+
+@dataclasses.dataclass
+class ElasticMeshManager:
+    ladder: List[Tuple[int, ...]] = dataclasses.field(
+        default_factory=lambda: list(DEFAULT_LADDER))
+
+    def select(self, chips_alive: int,
+               global_batch: Optional[int] = None) -> Tuple[int, ...]:
+        """Largest rung that fits the surviving chips (and batch)."""
+        for shape in self.ladder:
+            n = shape[0] * shape[1] * shape[2]
+            if n > chips_alive:
+                continue
+            if global_batch is not None:
+                dp = shape[0] * shape[1]
+                if global_batch % dp != 0:
+                    continue
+            return shape
+        raise RuntimeError(f"no viable mesh for {chips_alive} chips")
+
+    def make_mesh(self, shape: Tuple[int, ...]):
+        n = shape[0] * shape[1] * shape[2]
+        devices = jax.devices()[:n]
+        if shape[0] > 1:
+            return jax.make_mesh(shape, ("pod", "data", "model"),
+                                 devices=devices)
+        return jax.make_mesh(shape[1:], ("data", "model"), devices=devices)
+
+    def shrink_plan(self, current: Tuple[int, ...], chips_alive: int,
+                    global_batch: Optional[int] = None) -> dict:
+        """The drain -> re-mesh -> restore recipe as structured data."""
+        target = self.select(chips_alive, global_batch)
+        return {
+            "current": current,
+            "target": target,
+            "steps": [
+                "drain in-flight cycle",
+                "checkpoint (atomic commit)",
+                f"re-lower step under mesh {target}",
+                "restore re-sharded checkpoint",
+                "resume at saved step",
+            ],
+        }

@@ -1,0 +1,1 @@
+from repro.serving.scheduler import CycleServer, Request  # noqa: F401

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# smoke tests / benches must see ONE device (the dry-run sets its own flag)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

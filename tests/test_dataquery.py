@@ -1,0 +1,66 @@
+"""Property tests for the data-query model (packed query bitmasks)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dataquery as dq
+
+QCAPS = st.sampled_from([32, 64, 128, 256])
+
+
+@given(qcap=QCAPS, data=st.data())
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(qcap, data):
+    n = data.draw(st.integers(1, 40))
+    bits = np.array(data.draw(st.lists(
+        st.lists(st.booleans(), min_size=qcap, max_size=qcap),
+        min_size=n, max_size=n)), bool)
+    packed = dq.pack(jnp.asarray(bits))
+    assert packed.shape == (n, qcap // 32)
+    out = np.asarray(dq.unpack(packed, qcap))
+    assert (out == bits).all()
+
+
+@given(qcap=QCAPS, data=st.data())
+@settings(max_examples=30, deadline=None)
+def test_set_algebra_matches_python_sets(qcap, data):
+    n = data.draw(st.integers(1, 16))
+    sets_a = [set(data.draw(st.lists(st.integers(0, qcap - 1),
+                                     max_size=10))) for _ in range(n)]
+    sets_b = [set(data.draw(st.lists(st.integers(0, qcap - 1),
+                                     max_size=10))) for _ in range(n)]
+
+    def to_mask(sets):
+        bits = np.zeros((n, qcap), bool)
+        for i, s in enumerate(sets):
+            for q in s:
+                bits[i, q] = True
+        return dq.pack(jnp.asarray(bits))
+
+    ma, mb = to_mask(sets_a), to_mask(sets_b)
+    uni = np.asarray(dq.unpack(dq.union(ma, mb), qcap))
+    inter = np.asarray(dq.unpack(dq.intersect(ma, mb), qcap))
+    for i in range(n):
+        assert {q for q in range(qcap) if uni[i, q]} == sets_a[i] | sets_b[i]
+        assert {q for q in range(qcap) if inter[i, q]} \
+            == sets_a[i] & sets_b[i]
+    # popcount == set cardinality of union
+    pc = np.asarray(dq.popcount(dq.union(ma, mb)))
+    for i in range(n):
+        assert pc[i] == len(sets_a[i] | sets_b[i])
+    any_q = np.asarray(dq.any_query(ma))
+    for i in range(n):
+        assert any_q[i] == (len(sets_a[i]) > 0)
+
+
+@given(qcap=QCAPS, qid=st.integers(0, 255), data=st.data())
+@settings(max_examples=30, deadline=None)
+def test_select_query_membership(qcap, qid, data):
+    qid = qid % qcap
+    n = data.draw(st.integers(1, 16))
+    bits = np.array(data.draw(st.lists(
+        st.lists(st.booleans(), min_size=qcap, max_size=qcap),
+        min_size=n, max_size=n)), bool)
+    mask = dq.pack(jnp.asarray(bits))
+    sel = np.asarray(dq.select_query(mask, qid))
+    assert (sel == bits[:, qid]).all()

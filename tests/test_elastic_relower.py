@@ -1,0 +1,56 @@
+"""Elastic scaling: after a simulated shrink, the SAME step function
+re-lowers and compiles on the smaller mesh — the drain -> re-mesh ->
+restore recipe of runtime/elastic.py, executed for real.
+
+Runs in a subprocess because the 8-device host-platform flag must be set
+before jax initializes (the test suite itself stays at 1 device).
+"""
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import smoke_config
+    from repro.models.common import MeshAxes
+    from repro.models.registry import get_model
+    from repro.runtime.elastic import ElasticMeshManager
+
+    mgr = ElasticMeshManager(ladder=[(1, 2, 4), (1, 2, 2), (1, 1, 2),
+                                     (1, 1, 1)])
+    cfg = smoke_config("yi-6b")
+
+    def lower_on(shape):
+        mesh = mgr.make_mesh(shape)
+        axes = MeshAxes(mesh=mesh, dp=("data",), fsdp="data", tp="model")
+        api = get_model(cfg, axes)
+        import jax.numpy as jnp
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((4, 16), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((4, 16), jnp.int32),
+        }
+        params = api.param_shapes()
+        opt = jax.eval_shape(api.init_opt, params)
+        fn = jax.jit(api.train_step)
+        fn.lower(params, opt, batch).compile()
+        return shape
+
+    # full mesh, then simulated loss of half the devices
+    assert lower_on(mgr.select(8, global_batch=4)) == (1, 2, 4)
+    shrink = mgr.shrink_plan((1, 2, 4), 4, global_batch=4)
+    assert shrink["target"] == (1, 2, 2)
+    lower_on(shrink["target"])
+    print("ELASTIC_OK")
+""")
+
+
+def test_step_relowers_after_mesh_shrink():
+    out = subprocess.run([sys.executable, "-c", SCRIPT],
+                         capture_output=True, text=True, timeout=420,
+                         cwd=".")
+    assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,198 @@
+"""Substrate tests: data pipeline, checkpoint, fault tolerance, elastic,
+optimizer, serving scheduler."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import smoke_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               compress_grads)
+from repro.runtime import ElasticMeshManager, FaultTolerantLoop
+from repro.runtime.fault_tolerance import HeartbeatBoard, StragglerPolicy
+from repro.serving import CycleServer
+
+
+# ------------------------------------------------------------------ data
+def test_pipeline_deterministic_and_replayable():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4, seed=7)
+    p1 = TokenPipeline(cfg)
+    p2 = TokenPipeline(cfg)
+    b1 = p1.batch_at(5)
+    b2 = p2.batch_at(5)
+    assert (b1["tokens"] == b2["tokens"]).all()
+    assert (b1["labels"] == b1["tokens"] * 0 + b1["labels"]).all()
+    # labels are next-token shifted
+    assert b1["tokens"].shape == (4, 16)
+
+
+def test_pipeline_host_sharding_disjoint_rng():
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=8, seed=1)
+    h0 = TokenPipeline(cfg, host_id=0, n_hosts=2).batch_at(0)
+    h1 = TokenPipeline(cfg, host_id=1, n_hosts=2).batch_at(0)
+    assert h0["tokens"].shape == (4, 32)
+    assert not (h0["tokens"] == h1["tokens"]).all()
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": np.arange(10, dtype=np.float32),
+            "b": {"c": np.ones((3, 3), np.int32)}}
+    for step in (10, 20, 30):
+        mgr.save(tree, step, extra={"next_step": step})
+    assert mgr.latest_step() == 30
+    got, manifest = mgr.restore(tree, 30)
+    assert (got["a"] == tree["a"]).all()
+    assert manifest["extra"]["next_step"] == 30
+    # keep=2 garbage-collected step 10
+    assert not os.path.isdir(tmp_path / "step_00000010")
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": np.arange(100, dtype=np.float32)}
+    path = mgr.save(tree, 1, extra={"next_step": 1})
+    shard = os.path.join(path, "shard_0.npz")
+    blob = dict(np.load(shard))
+    blob["w"][0] = 999.0
+    np.savez(shard, **blob)
+    with pytest.raises(IOError, match="corruption"):
+        mgr.restore(tree, 1)
+
+
+def test_checkpoint_ignores_partial_writes(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": np.zeros(4, np.float32)}
+    mgr.save(tree, 5, extra={"next_step": 5})
+    os.makedirs(tmp_path / "step_00000009.tmp")   # simulated crash
+    assert mgr.latest_step() == 5
+    CheckpointManager(str(tmp_path))              # reopen: gc the .tmp
+    assert not os.path.isdir(tmp_path / "step_00000009.tmp")
+
+
+# -------------------------------------------------------- fault tolerance
+def test_fault_tolerant_loop_restarts_bit_exact(tmp_path):
+    """Inject a failure mid-run; the loop must resume from the checkpoint
+    and produce the SAME final state as an uninterrupted run."""
+    def step_fn(state, step):
+        return {"x": state["x"] + step}, {"step": step}
+
+    mgr1 = CheckpointManager(str(tmp_path / "a"))
+    loop1 = FaultTolerantLoop(step_fn, mgr1, save_every=5)
+    s1, _ = loop1.run({"x": np.zeros(2)}, 0, 20)
+
+    mgr2 = CheckpointManager(str(tmp_path / "b"))
+    loop2 = FaultTolerantLoop(step_fn, mgr2, save_every=5)
+    s2, _ = loop2.run({"x": np.zeros(2)}, 0, 20,
+                      fail_at={13: RuntimeError("injected node failure")})
+    assert loop2.restarts == 1
+    np.testing.assert_array_equal(s1["x"], s2["x"])
+
+
+def test_fault_before_first_checkpoint_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    loop = FaultTolerantLoop(lambda s, i: (s, {}), mgr, save_every=50)
+    with pytest.raises(RuntimeError):
+        loop.run({"x": np.zeros(1)}, 0, 10,
+                 fail_at={2: RuntimeError("early failure")})
+
+
+def test_straggler_detection():
+    board = HeartbeatBoard()
+    pol = StragglerPolicy(factor=1.5, patience=3)
+    for step in range(4):
+        for host in range(4):
+            dur = 1.0 if host != 2 else 3.0   # host 2 is slow
+            board.beat(host, step, dur, now=float(step))
+    assert board.stragglers(pol) == [2]
+    assert board.dead_hosts(pol, now=100.0) == [0, 1, 2, 3]
+    assert board.dead_hosts(pol, now=3.5) == []
+
+
+def test_elastic_mesh_ladder():
+    mgr = ElasticMeshManager()
+    assert mgr.select(512) == (2, 16, 16)
+    assert mgr.select(511) == (1, 16, 16)
+    assert mgr.select(200, global_batch=256) == (1, 8, 16)
+    plan = mgr.shrink_plan((2, 16, 16), 300)
+    assert plan["target"] == (1, 16, 16)
+    with pytest.raises(RuntimeError):
+        mgr.select(0)
+
+
+# --------------------------------------------------------------- optimizer
+def test_adamw_descends_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, gnorm = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_sign_compression_error_feedback_unbiased(seed):
+    """With error feedback, compressed updates track the true gradient sum
+    (the residual stays bounded)."""
+    rng = np.random.default_rng(seed)
+    cfg = AdamWConfig(compression="sign")
+    g_total = np.zeros(8)
+    q_total = np.zeros(8)
+    state = {}
+    for _ in range(60):
+        g = {"w": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+        q, state = compress_grads(g, state, cfg)
+        g_total += np.asarray(g["w"])
+        q_total += np.asarray(q["w"])
+    err = np.abs(g_total - q_total).max()
+    # residual bounded by one step's magnitude, not growing with T
+    assert err < 6.0
+
+
+# ----------------------------------------------------------------- serving
+def test_cycle_server_bounded_cycles_and_completion():
+    cfg = smoke_config("stablelm-1.6b")
+    srv = CycleServer(cfg, capacity=4, max_seq=64, prefill_len=8,
+                      prefill_budget=2)
+    rng = np.random.default_rng(0)
+    reqs = [srv.submit(rng.integers(1, cfg.vocab, 8).tolist(),
+                       max_new_tokens=5) for _ in range(10)]
+    done = srv.run_until_drained()
+    assert len(done) == 10
+    assert all(len(r.output) == 5 for r in reqs)
+    # bounded admission: at most `capacity` active at once
+    assert srv.cycles >= 10 * 5 // 4 // 2  # sanity lower bound
+
+
+def test_cycle_server_decode_matches_offline_prefill():
+    """A served continuation equals offline teacher-forced generation."""
+    from repro.models.registry import get_model
+    cfg = smoke_config("yi-6b")
+    srv = CycleServer(cfg, capacity=2, max_seq=32, prefill_len=8)
+    api = get_model(cfg)
+    prompt = list(range(1, 9))
+    r = srv.submit(prompt, max_new_tokens=4)
+    srv.run_until_drained()
+    # offline: greedy decode with the same params
+    toks = list(prompt)
+    params = srv.params
+    logits, cache = api.prefill(params, {"tokens": jnp.asarray([toks],
+                                                               jnp.int32)},
+                                cache_capacity=32)
+    out = [int(jnp.argmax(logits[0]))]
+    pos = len(toks)
+    for _ in range(3):
+        logits, cache = api.decode_step(
+            params, cache, jnp.asarray([[out[-1]]], jnp.int32),
+            jnp.asarray([pos], jnp.int32))
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    assert r.output == out
