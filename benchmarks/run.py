@@ -56,6 +56,13 @@ def main() -> None:
         _emit(f"fig11_heavy{hr}", rs.mean_cycle_s * 1e6,
               f"shared_good={rs.good_wips:.2f};qaat_good={rb.good_wips:.2f}")
 
+    print("== Pipeline: dispatch/collect overlap vs sync ==", flush=True)
+    from benchmarks import pipeline_bench
+    for label, dt, cycles, per_cycle in pipeline_bench.run(
+            n=100 if quick else 300):
+        _emit(f"pipeline_{label}", per_cycle * 1e6,
+              f"total_s={dt:.3f};cycles={cycles}")
+
     print("== Roofline (from dry-run artifacts) ==", flush=True)
     for arch, shape, r in roofline_report.run():
         _emit(f"roofline_{arch}_{shape}", r["step_time_s"] * 1e6,

@@ -5,7 +5,9 @@ Layers:
   storage     — columnar tables, functional MVCC snapshots, key indexes
   operators   — shared scan / join / sort / top-n / group-by
   plan        — global query plan (DAG), template merging (Fig. 3)
-  executor    — heartbeat batch cycles over one jitted always-on plan
+  lowering    — plan -> staged operator graph IR (windows, masks, caps)
+  backends    — operator backend registry: jnp reference vs Pallas kernels
+  executor    — pipelined dispatch/collect heartbeats over the jitted plan
   baseline    — query-at-a-time executor ("SystemX" stand-in)
   sla         — bounded-computation / response-time provisioning (§3.5)
 """

@@ -1,0 +1,124 @@
+"""Operator backend registry: jnp reference ops vs Pallas TPU kernels.
+
+The lowered operator graph (lowering.py) is backend-agnostic: every stage
+that has a compute hot-spot resolves its implementation through this
+registry at plan-build time.  Two backends ship:
+
+  * ``jnp``    — the pure-jnp reference operators (kernels/ref.py).  This
+                 is the CPU execution path AND the semantic oracle every
+                 Pallas kernel is validated against.
+  * ``pallas`` — the TPU kernels (kernels/clockscan.py, bitmask_join.py,
+                 shared_groupby.py), run in interpret mode off-TPU so the
+                 full engine path stays testable on CPU.
+
+Backend surface (the three shared-operator hot loops):
+
+  scan(cols, lo, hi, valid)                 -> uint32[T, W]   (ClockScan)
+  join_block(kl, ml, kr, mr, valid_r)       -> (rid, mask)    (shared join)
+  groupby(codes, vals, mask, n_groups)      -> (count, sum)
+
+Everything else in the cycle — the dense PK-index gather join, union
+compression, argsort and result routing — lowers directly to XLA
+gather/sort/scatter and is shared verbatim by both backends (see
+core/operators.py).
+
+Resolution: ``resolve_backend("jnp"|"pallas"|"auto")``.  ``auto`` honours
+the ``REPRO_KERNELS`` environment override (the kernel test-suite's knob;
+``ref`` is accepted as an alias of ``jnp``), else picks Pallas exactly
+when a TPU backend is present.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatorBackend:
+    """Implementations for the shared-operator hot loops.
+
+    All callables must be traceable (pure jax) — they are baked into the
+    always-on compiled plan at build time.
+    """
+    name: str
+    scan: Callable        # (cols[C,T], lo[C,Q], hi[C,Q], valid[T]) -> u32[T,W]
+    join_block: Callable  # (kl[Tl], ml[Tl,W], kr[Tr], mr[Tr,W], vr[Tr])
+                          #   -> (rid int32[Tl], mask u32[Tl,W])
+    groupby: Callable     # (codes[T], vals[T], mask[T,W], G) -> (cnt, sum)
+
+
+_REGISTRY: Dict[str, OperatorBackend] = {}
+
+
+def register_backend(backend: OperatorBackend) -> None:
+    _REGISTRY[backend.name] = backend
+
+
+def available_backends() -> Tuple[str, ...]:
+    _ensure_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def _ensure_registered() -> None:
+    if "pallas" not in _REGISTRY:
+        import repro.kernels  # noqa: F401  (registers the pallas backend)
+
+
+def get_backend(name: str) -> OperatorBackend:
+    _ensure_registered()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown backend {name!r}; "
+                       f"available: {available_backends()}")
+    return _REGISTRY[name]
+
+
+def resolve_backend(kernels: str = "auto") -> OperatorBackend:
+    """Map a ``kernels=`` spec to a concrete backend.
+
+    "jnp" / "ref" -> the reference backend; "pallas" -> the TPU kernels;
+    "auto" -> REPRO_KERNELS override if set, else Pallas iff running on a
+    TPU backend.
+    """
+    if kernels in ("jnp", "ref"):
+        return get_backend("jnp")
+    if kernels == "pallas":
+        return get_backend("pallas")
+    if kernels != "auto":
+        raise ValueError(f"kernels must be 'jnp', 'pallas' or 'auto', "
+                         f"got {kernels!r}")
+    forced = os.environ.get("REPRO_KERNELS")
+    if forced and forced != "auto":
+        try:
+            return resolve_backend(forced)
+        except ValueError as e:
+            raise ValueError(f"REPRO_KERNELS: {e}") from None
+    return get_backend(
+        "pallas" if jax.default_backend() == "tpu" else "jnp")
+
+
+# ---------------------------------------------------------------------------
+# The jnp reference backend (oracle + CPU execution path)
+# ---------------------------------------------------------------------------
+
+
+def _jnp_scan(cols, lo, hi, valid):
+    from repro.kernels import ref
+    return ref.clockscan_ref(cols, lo, hi, valid)
+
+
+def _jnp_join_block(keys_l, mask_l, keys_r, mask_r, valid_r):
+    from repro.kernels import ref
+    return ref.bitmask_join_ref(keys_l, mask_l, keys_r, mask_r, valid_r)
+
+
+def _jnp_groupby(group_code, values, mask, n_groups):
+    from repro.kernels import ref
+    return ref.shared_groupby_ref(group_code, values, mask, n_groups)
+
+
+register_backend(OperatorBackend(
+    name="jnp", scan=_jnp_scan, join_block=_jnp_join_block,
+    groupby=_jnp_groupby))

@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core.plan import CompiledPlan, QueryTemplate
 from repro.core.executor import Ticket
+from repro.core.storage import locate_rows_by_key
 
 INT_MIN = -2147483647
 INT_MAX = 2147483647
@@ -77,10 +78,17 @@ class QueryAtATimeEngine:
             for j in tpl.joins:
                 fk = spine[j.fk_col][cand_safe]
                 pk_tbl = storage[j.pk_table]
-                idx = pk_tbl["_pk_index"]
-                safe_fk = jnp.clip(fk, 0, idx.shape[0] - 1)
-                rid = jnp.where((fk >= 0) & (fk < idx.shape[0]),
-                                idx[safe_fk], -1)
+                pk_schema = plan.catalog.schemas[j.pk_table]
+                if pk_schema.indexed:
+                    idx = pk_tbl["_pk_index"]
+                    safe_fk = jnp.clip(fk, 0, idx.shape[0] - 1)
+                    rid = jnp.where((fk >= 0) & (fk < idx.shape[0]),
+                                    idx[safe_fk], -1)
+                else:
+                    # no dense index: key-equality lookup (mirrors the
+                    # shared engine's block-join access path)
+                    rid = locate_rows_by_key(pk_tbl[pk_schema.pk], fk,
+                                             pk_tbl["_valid"])
                 live &= rid >= 0
                 rid_safe = jnp.clip(rid, 0, pk_tbl["_valid"].shape[0] - 1)
                 live &= pk_tbl["_valid"][rid_safe]
@@ -125,19 +133,28 @@ class QueryAtATimeEngine:
         return fn
 
     # ------------------------------------------------------------------
-    def execute(self, template: str, params: Dict) -> Ticket:
+    def dispatch(self, template: str, params: Dict) -> Ticket:
+        """Launch one query's prepared plan; returns while the device
+        still computes (the same dispatch/collect protocol as
+        SharedDBEngine, so engine comparisons measure like with like)."""
         tpl = self.plan.templates[template]
         n_preds = max(len(tpl.preds), 1)
         arr = np.zeros((n_preds, 2), np.int32)
         for pi in range(len(tpl.preds)):
             arr[pi] = params[pi]
         t = Ticket(0, template, params, time.time())
-        res = self._fns[template](self.state, jnp.asarray(arr))
-        res = jax.tree.map(np.asarray, res)
-        t.result = res
+        t.result = self._fns[template](self.state, jnp.asarray(arr))
+        return t
+
+    def collect(self, t: Ticket) -> Ticket:
+        """Block on a dispatched query and materialize its result."""
+        t.result = jax.tree.map(np.asarray, t.result)
         t.done_time = time.time()
         self.queries_done += 1
         return t
+
+    def execute(self, template: str, params: Dict) -> Ticket:
+        return self.collect(self.dispatch(template, params))
 
     def execute_batch(self, items: List) -> List[Ticket]:
         """Queries one at a time — the traditional model."""
@@ -149,8 +166,7 @@ class QueryAtATimeEngine:
                                         empty_update_batch)
         schema = self.plan.catalog.schemas[table]
         slots = UpdateSlots(1, 1, 1)
-        b = jax.tree.map(lambda a: np.array(a),
-                         empty_update_batch(schema, slots))
+        b = empty_update_batch(schema, slots, xp=np)
         if kind == "insert":
             for c, v in payload.items():
                 b["ins_rows"][c][0] = int(v)

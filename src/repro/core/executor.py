@@ -1,12 +1,28 @@
-"""Heartbeat executor (paper §3.2, §4.2, Algorithm 1).
+"""Heartbeat executor (paper §3.2, §4.2, Algorithm 1) — pipelined.
 
 While one batch of queries and updates executes, newly arriving work queues;
 at each heartbeat the queues are drained (up to the per-template slot
 capacity — excess stays queued for the next cycle, exactly the paper's
 admission rule) and pushed through ONE jitted global-plan step.
 
-Latency accounting matches §3.5: a query waits at most one cycle in the
-queue plus one cycle of processing => worst-case latency = 2 x cycle time.
+The heartbeat is split into two phases so host and device overlap:
+
+  dispatch() — drain the queues into PREALLOCATED staging buffers, stage
+               the batch onto the device, and launch the cycle.  JAX
+               dispatch is asynchronous, so this returns while the device
+               still computes.
+  collect()  — block on the oldest in-flight cycle and route its results
+               to the waiting tickets.
+
+With double-buffered admission (two staging buffer sets, pipeline depth
+2), the queue draining and numpy parameter staging for heartbeat N+1
+overlap with device execution of heartbeat N.  A query admitted at
+dispatch k completes at collect k, so the paper's latency accounting is
+unchanged: a query waits at most one cycle in the queue plus one cycle of
+processing => worst-case latency = 2 x cycle time (§3.5).
+
+``run_cycle()`` (dispatch immediately followed by collect) preserves the
+original synchronous semantics for callers that want them.
 """
 from __future__ import annotations
 
@@ -21,7 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.plan import CompiledPlan, build_cycle_fn
-from repro.core.storage import UpdateSlots
+from repro.core.storage import (UPDATE_BATCH_RESET, UpdateSlots,
+                                empty_update_batch)
 
 
 @dataclasses.dataclass
@@ -38,12 +55,52 @@ class Ticket:
         return (self.done_time - self.submit_time) if self.done_time else None
 
 
+class _StagingBuffers:
+    """Preallocated host-side admission buffers for ONE pipeline slot.
+
+    Rebuilding every numpy array per heartbeat put allocation on the
+    critical path; these persist for the engine's lifetime and only the
+    activation/mask fields are cleared between uses (parameter/payload
+    slots are masked out by ``active``/``*_mask`` and may hold stale
+    values).
+    """
+
+    def __init__(self, plan: CompiledPlan, slots: UpdateSlots):
+        self.params: Dict[str, np.ndarray] = {}
+        self.active: Dict[str, np.ndarray] = {}
+        for name, tpl in plan.templates.items():
+            cap = plan.caps[name]
+            n_preds = max(len(tpl.preds), 1)
+            self.params[name] = np.zeros((cap, n_preds, 2), np.int32)
+            self.active[name] = np.zeros((cap,), bool)
+        # same layout as the device batches, numpy-backed (ONE source of
+        # truth: storage.empty_update_batch)
+        self.updates: Dict[str, Dict[str, Any]] = {
+            t: empty_update_batch(schema, slots, xp=np)
+            for t, schema in plan.catalog.schemas.items()}
+
+    def reset(self) -> None:
+        for a in self.active.values():
+            a[:] = False
+        for b in self.updates.values():
+            for field, fill in UPDATE_BATCH_RESET.items():
+                b[field][:] = fill
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-not-collected heartbeat."""
+    admitted: Dict[str, List[Ticket]]
+    results: Any
+
+
 class SharedDBEngine:
     """The always-on global plan + admission queues."""
 
     def __init__(self, plan: CompiledPlan, update_slots: UpdateSlots,
                  initial_data: Dict[str, Dict[str, np.ndarray]],
-                 jit: bool = True):
+                 jit: bool = True, kernels: str = "auto",
+                 pipeline_depth: int = 2):
         self.plan = plan
         self.update_slots = update_slots
         self.state = plan.catalog.init_state(initial_data)
@@ -51,11 +108,22 @@ class SharedDBEngine:
             name: collections.deque() for name in plan.templates}
         self._update_queue: collections.deque = collections.deque()
         self._ticket_ids = itertools.count()
-        cycle = build_cycle_fn(plan, update_slots)
+        cycle = build_cycle_fn(plan, update_slots, kernels=kernels)
         # donate storage: the snapshot rolls forward functionally in place
         self._cycle = jax.jit(cycle, donate_argnums=(0,)) if jit else cycle
+        self.pipeline_depth = max(1, pipeline_depth)
+        # double-buffered admission: one staging set per pipeline slot
+        self._staging = [_StagingBuffers(plan, update_slots)
+                         for _ in range(self.pipeline_depth)]
+        self._staging_idx = 0
+        self._inflight: collections.deque[_InFlight] = collections.deque()
+        # routing dicts from backpressure collects inside dispatch(),
+        # surfaced by the next public collect() so no cycle's routed
+        # tickets vanish from the return-value stream
+        self._spilled: Dict[str, List[Ticket]] = {}
         self.cycles_run = 0
         self.queries_done = 0
+        self.last_overflow = 0    # union-cap overflow of the last collect
 
     # ------------------------------------------------------------------ API
     def submit(self, template: str, params: Dict[str, Any]) -> Ticket:
@@ -72,14 +140,16 @@ class SharedDBEngine:
         return (sum(len(q) for q in self._queues.values())
                 + len(self._update_queue))
 
+    def in_flight(self) -> int:
+        return len(self._inflight)
+
     # ------------------------------------------------------------ one beat
-    def _admit_queries(self):
+    def _admit_queries(self, buf: _StagingBuffers):
         batch, admitted = {}, {}
         for name, tpl in self.plan.templates.items():
             cap = self.plan.caps[name]
-            n_preds = max(len(tpl.preds), 1)
-            params = np.zeros((cap, n_preds, 2), np.int32)
-            active = np.zeros((cap,), bool)
+            params = buf.params[name]
+            active = buf.active[name]
             take: List[Ticket] = []
             q = self._queues[name]
             while q and len(take) < cap:
@@ -88,28 +158,17 @@ class SharedDBEngine:
                 active[slot] = True
                 for pi in range(len(tpl.preds)):
                     lo, hi = ticket.params[pi]
-                    params[slot, pi] = (lo, hi)
+                    params[slot, pi, 0] = lo
+                    params[slot, pi, 1] = hi
             batch[name] = {"params": jnp.asarray(params),
                            "active": jnp.asarray(active)}
             admitted[name] = take
         return batch, admitted
 
-    def _admit_updates(self):
+    def _admit_updates(self, buf: _StagingBuffers):
         cat = self.plan.catalog
         s = self.update_slots
-        np_batches = {}
-        for t, schema in cat.schemas.items():
-            np_batches[t] = {
-                "ins_rows": {c: np.zeros((s.n_insert,), np.int32)
-                             for c in schema.columns},
-                "ins_mask": np.zeros((s.n_insert,), bool),
-                "upd_key": np.full((s.n_update,), -1, np.int32),
-                "upd_col": np.zeros((s.n_update,), np.int32),
-                "upd_val": np.zeros((s.n_update,), np.int32),
-                "upd_mask": np.zeros((s.n_update,), bool),
-                "del_key": np.full((s.n_delete,), -1, np.int32),
-                "del_mask": np.zeros((s.n_delete,), bool),
-            }
+        np_batches = buf.updates
         fill = {t: {"ins": 0, "upd": 0, "del": 0} for t in cat.schemas}
         hold = collections.deque()
         while self._update_queue:
@@ -146,15 +205,48 @@ class SharedDBEngine:
         self._update_queue = hold
         return jax.tree.map(jnp.asarray, np_batches)
 
-    def run_cycle(self) -> Dict[str, List[Ticket]]:
-        """One heartbeat: drain queues, execute the global plan, route."""
-        queries, admitted = self._admit_queries()
-        updates = self._admit_updates()
+    def dispatch(self) -> None:
+        """Admit one heartbeat's work and launch the global plan.
+
+        Returns as soon as the computation is dispatched (JAX async);
+        results are claimed by a later collect().  At full pipeline depth
+        the oldest in-flight cycle is collected first (backpressure), so
+        at most ``pipeline_depth`` cycles are ever outstanding — which
+        also makes staging-buffer reuse safe: a buffer is only rewritten
+        after the cycle that consumed it has completed.
+        """
+        while len(self._inflight) >= self.pipeline_depth:
+            for name, tickets in self._collect_oldest().items():
+                self._spilled.setdefault(name, []).extend(tickets)
+        buf = self._staging[self._staging_idx]
+        self._staging_idx = (self._staging_idx + 1) % len(self._staging)
+        buf.reset()
+        queries, admitted = self._admit_queries(buf)
+        updates = self._admit_updates(buf)
         self.state, results = self._cycle(self.state, queries, updates)
+        self._inflight.append(_InFlight(admitted, results))
+
+    def collect(self) -> Dict[str, List[Ticket]]:
+        """Block on the oldest in-flight heartbeat and route its results.
+
+        Also surfaces any routing spilled by dispatch()-side
+        backpressure, so every admitted ticket appears in exactly one
+        collect() return."""
+        out, self._spilled = self._spilled, {}
+        for name, tickets in self._collect_oldest().items():
+            out.setdefault(name, []).extend(tickets)
+        return out
+
+    def _collect_oldest(self) -> Dict[str, List[Ticket]]:
+        if not self._inflight:
+            return {}
+        flight = self._inflight.popleft()
+        results = flight.results
         jax.block_until_ready(results)
+        self.last_overflow = int(results["_overflow"])
         now = time.time()
         out = {}
-        for name, tickets in admitted.items():
+        for name, tickets in flight.admitted.items():
             res = jax.tree.map(np.asarray, results[name])
             for slot, ticket in enumerate(tickets):
                 ticket.result = jax.tree.map(lambda a: a[slot], res)
@@ -164,11 +256,33 @@ class SharedDBEngine:
         self.cycles_run += 1
         return out
 
-    def run_until_drained(self, max_cycles: int = 1000):
+    def run_cycle(self) -> Dict[str, List[Ticket]]:
+        """One synchronous heartbeat: dispatch then drain all in-flight."""
+        self.dispatch()
+        out: Dict[str, List[Ticket]] = {}
+        while self._inflight:
+            for name, tickets in self.collect().items():
+                out.setdefault(name, []).extend(tickets)
+        return out
+
+    def run_until_drained(self, max_cycles: int = 1000,
+                          pipelined: bool = False):
+        """Cycle until the queues are empty.
+
+        pipelined=True keeps up to ``pipeline_depth`` heartbeats in
+        flight, overlapping admission/staging for cycle N+1 with device
+        execution of cycle N.
+        """
+        depth = self.pipeline_depth if pipelined else 1
         done = []
-        while self.pending() and max_cycles:
-            done.append(self.run_cycle())
-            max_cycles -= 1
+        dispatched = 0
+        while ((self.pending() and dispatched < max_cycles)
+               or self._inflight):
+            while (self.pending() and dispatched < max_cycles
+                   and len(self._inflight) < depth):
+                self.dispatch()
+                dispatched += 1
+            done.append(self.collect())
         return done
 
     # --------------------------------------------------- host-side fetch

@@ -1,0 +1,370 @@
+"""Lowering: CompiledPlan -> explicit staged operator graph (the IR).
+
+``compile_plan`` (plan.py) performs the paper's *logical* optimization:
+predicate pushdown and operator merging across templates (Fig. 2/3).
+This module performs the *physical* lowering: it turns the merged plan
+into an explicit pipeline of stages
+
+    update-apply -> shared scans -> shared joins
+                 -> shared sorts / group-bys -> result routing
+
+with every piece of static metadata — per-node word windows, subscriber
+bitmasks, slot layouts, bounded union caps, per-query limit vectors —
+computed HERE, at lowering time, instead of inside the traced closure.
+The lowered graph is inspectable (``LoweredPlan.stages()``), and executing
+it is a mechanical walk that delegates each hot loop to an operator
+backend (backends.py): the jnp reference ops or the Pallas TPU kernels.
+
+Join access paths are chosen at lowering time, per node:
+
+  * ``gather`` — the PK table maintains a dense key->row index
+    (storage.py), so the shared PK-FK join is an O(1) gather per spine
+    row.  This is the TPU-native replacement for the paper's hash join
+    and needs no kernel; both backends share it.
+  * ``block``  — no dense index (schema.key_space == 0): the shared join
+    runs as a blocked key-equality kernel fused with query-set
+    intersection (kernels/bitmask_join.py on the Pallas backend).
+
+Per-cycle work remains a static function of table/slot capacities — the
+bounded-computation property (§3.5) — because every shape below is fixed
+at lowering time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import operators as ops
+from repro.core.backends import OperatorBackend
+from repro.core.plan import CompiledPlan, GroupAgg
+
+INT_MIN = ops.INT_MIN
+INT_MAX = ops.INT_MAX
+
+# (template, q_offset_in_window, slot_capacity)
+SlotRange = Tuple[str, int, int]
+
+
+# ---------------------------------------------------------------------------
+# Stage IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanStage:
+    """One ClockScan pass over a base table for ALL referencing queries."""
+    table: str
+    cols: Tuple[str, ...]
+    wlo: int                                  # word window [wlo, whi)
+    whi: int
+    slots: Tuple[SlotRange, ...]              # referencing templates
+    # (template, col_idx, param_idx, q_offset_in_window, cap)
+    bindings: Tuple[Tuple[str, int, int, int, int], ...]
+
+    @property
+    def q_window(self) -> int:
+        return (self.whi - self.wlo) * 32
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinStage:
+    """One shared PK-FK join per (spine, fk, pk) signature."""
+    spine: str
+    fk_col: str
+    pk_table: str
+    kind: str                                 # "gather" | "block"
+    pk_col: str                               # key column on the PK side
+    sub_mask: np.ndarray                      # uint32[W] subscriber words
+
+
+@dataclasses.dataclass(frozen=True)
+class SortStage:
+    """Shared sort over the bounded union + fused per-query top-n."""
+    spine: str
+    col: str
+    desc: bool
+    wlo: int
+    whi: int
+    sub_mask: np.ndarray                      # uint32[whi-wlo], window-local
+    union_cap: int
+    slots: Tuple[SlotRange, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupStage:
+    """Shared group-by: phase 1 over the union, phase 2 per query."""
+    spine: str
+    agg: GroupAgg
+    wlo: int
+    whi: int
+    union_cap: int
+    slots: Tuple[SlotRange, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteStage:
+    """Natural-order routing for unsorted templates, one pass per spine."""
+    spine: str
+    wlo: int
+    whi: int
+    sub_mask: np.ndarray                      # uint32[whi-wlo], window-local
+    union_cap: int
+    slots: Tuple[SlotRange, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredPlan:
+    plan: CompiledPlan
+    qcap: int
+    W: int
+    scans: Tuple[ScanStage, ...]
+    joins: Tuple[JoinStage, ...]
+    sorts: Tuple[SortStage, ...]
+    groups: Tuple[GroupStage, ...]
+    routes: Tuple[RouteStage, ...]
+    limits: np.ndarray                        # int32[qcap] per-slot top-n
+
+    def stages(self) -> Iterator[Tuple[str, object]]:
+        """The staged execution order (the IR, for inspection/debug)."""
+        for s in self.scans:
+            yield "scan", s
+        for j in self.joins:
+            yield "join", j
+        for s in self.sorts:
+            yield "sort", s
+        for g in self.groups:
+            yield "group", g
+        for r in self.routes:
+            yield "route", r
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def _slot_ranges(plan: CompiledPlan, names: List[str],
+                 base: int) -> Tuple[SlotRange, ...]:
+    return tuple((n, plan.offsets[n] - base, plan.caps[n]) for n in names)
+
+
+def lower_plan(plan: CompiledPlan) -> LoweredPlan:
+    cat = plan.catalog
+    W = plan.qcap // 32
+
+    scans = []
+    for table, node in plan.scans.items():
+        wlo, whi = plan.word_range(node.referencing)
+        base = wlo * 32
+        bindings = tuple(
+            (name, col_idx, param_idx, plan.offsets[name] - base,
+             plan.caps[name])
+            for name, col_idx, param_idx in node.bindings)
+        scans.append(ScanStage(
+            table=table, cols=tuple(node.cols), wlo=wlo, whi=whi,
+            slots=_slot_ranges(plan, node.referencing, base),
+            bindings=bindings))
+
+    joins = []
+    for j in plan.joins:
+        schema = cat.schemas[j.pk_table]
+        if schema.pk is None:
+            raise ValueError(
+                f"join {j.spine}->{j.pk_table}: PK table has no key column")
+        kind = "gather" if schema.key_space > 0 else "block"
+        joins.append(JoinStage(
+            spine=j.spine, fk_col=j.fk_col, pk_table=j.pk_table,
+            kind=kind, pk_col=schema.pk,
+            sub_mask=plan.sub_mask(j.subscribers)))
+
+    sorts = []
+    for s in plan.sorts:
+        wlo, whi = plan.word_range(s.subscribers)
+        T = cat.schemas[s.spine].capacity
+        sorts.append(SortStage(
+            spine=s.spine, col=s.col, desc=s.desc, wlo=wlo, whi=whi,
+            sub_mask=plan.sub_mask(s.subscribers)[wlo:whi],
+            union_cap=min(T, plan.union_cap),
+            slots=_slot_ranges(plan, s.subscribers, wlo * 32)))
+
+    groups = []
+    for g in plan.groups:
+        wlo, whi = plan.word_range(g.subscribers)
+        T = cat.schemas[g.spine].capacity
+        groups.append(GroupStage(
+            spine=g.spine, agg=g.agg, wlo=wlo, whi=whi,
+            union_cap=min(T, plan.group_union_cap),
+            slots=_slot_ranges(plan, g.subscribers, wlo * 32)))
+
+    routed = {name for st in sorts + groups for name, _, _ in st.slots}
+    by_spine: Dict[str, List[str]] = {}
+    for name, t in plan.templates.items():
+        if name not in routed:
+            by_spine.setdefault(t.spine, []).append(name)
+    routes = []
+    for spine, names in by_spine.items():
+        wlo, whi = plan.word_range(names)
+        T = cat.schemas[spine].capacity
+        routes.append(RouteStage(
+            spine=spine, wlo=wlo, whi=whi,
+            sub_mask=plan.sub_mask(names)[wlo:whi],
+            union_cap=min(T, plan.union_cap),
+            slots=_slot_ranges(plan, names, wlo * 32)))
+
+    limits = np.ones(plan.qcap, np.int32)
+    for name, t in plan.templates.items():
+        o, c = plan.offsets[name], plan.caps[name]
+        limits[o:o + c] = min(t.limit, plan.max_results)
+
+    return LoweredPlan(
+        plan=plan, qcap=plan.qcap, W=W,
+        scans=tuple(scans), joins=tuple(joins), sorts=tuple(sorts),
+        groups=tuple(groups), routes=tuple(routes), limits=limits)
+
+
+# ---------------------------------------------------------------------------
+# Executing the lowered graph: one heartbeat of the always-on plan
+# ---------------------------------------------------------------------------
+
+
+def build_cycle(lowered: LoweredPlan, backend: OperatorBackend):
+    """Returns cycle(storage, queries, updates) -> (storage', results).
+
+    queries: {template: {"params": int32[cap, n_preds, 2],
+                          "active": bool[cap]}}
+    updates: {table: update batch dict (see storage.empty_update_batch)}
+    results: per template row-id matrices / group top-k; all fixed shapes,
+    plus "_overflow" (union-cap overflow count) and "_join_rids".
+    """
+    from repro.core.storage import apply_updates
+
+    plan = lowered.plan
+    cat = plan.catalog
+    W = lowered.W
+    limits = jnp.asarray(lowered.limits)
+    join_subs = [jnp.asarray(j.sub_mask) for j in lowered.joins]
+    sort_subs = [jnp.asarray(s.sub_mask) for s in lowered.sorts]
+    route_subs = [jnp.asarray(r.sub_mask) for r in lowered.routes]
+
+    def cycle(storage, queries, updates):
+        # 1. apply updates in arrival order (cycle-consistent snapshot)
+        storage = dict(storage)
+        for table, batch in updates.items():
+            storage[table] = apply_updates(cat.schemas[table],
+                                           storage[table], batch)
+
+        # 2. shared scans (ClockScan): one pass per table for ALL queries,
+        #    each touching only its subscribers' word window.
+        scan_masks = {}
+        for st in lowered.scans:
+            tbl = storage[st.table]
+            C = max(len(st.cols), 1)
+            T = cat.schemas[st.table].capacity
+            q_sub = st.q_window
+            lo = jnp.full((C, q_sub), INT_MAX, jnp.int32)  # default: fail
+            hi = jnp.full((C, q_sub), INT_MIN, jnp.int32)
+            # referencing templates: default pass-all on their active slots
+            for name, o, c in st.slots:
+                act = queries[name]["active"]
+                lo = lo.at[:, o:o + c].set(
+                    jnp.where(act[None, :], INT_MIN, INT_MAX))
+                hi = hi.at[:, o:o + c].set(
+                    jnp.where(act[None, :], INT_MAX, INT_MIN))
+            # bound predicated columns from query params
+            for name, col_idx, param_idx, o, c in st.bindings:
+                act = queries[name]["active"]
+                p = queries[name]["params"][:, param_idx]     # [cap, 2]
+                lo = lo.at[col_idx, o:o + c].set(
+                    jnp.where(act, p[:, 0], INT_MAX))
+                hi = hi.at[col_idx, o:o + c].set(
+                    jnp.where(act, p[:, 1], INT_MIN))
+            cols = (jnp.stack([tbl[c] for c in st.cols])
+                    if st.cols else jnp.zeros((1, T), jnp.int32))
+            m = backend.scan(cols, lo, hi, tbl["_valid"])
+            scan_masks[st.table] = jnp.pad(m, ((0, 0),
+                                               (st.wlo, W - st.whi)))
+
+        # 3. shared joins: ONE big join per signature, query_id in the
+        #    predicate via bitmask intersection; non-subscribers pass
+        #    through untouched.
+        spine_masks = dict(scan_masks)
+        join_rids = {}
+        for st, sub in zip(lowered.joins, join_subs):
+            tbl = storage[st.spine]
+            m = spine_masks[st.spine]
+            if st.kind == "gather":
+                rid, combined = ops.shared_join_fk(
+                    tbl[st.fk_col], m,
+                    storage[st.pk_table]["_pk_index"],
+                    scan_masks[st.pk_table])
+            else:  # block: key-equality kernel, no dense index
+                pk_tbl = storage[st.pk_table]
+                rid, combined = backend.join_block(
+                    tbl[st.fk_col], m, pk_tbl[st.pk_col],
+                    scan_masks[st.pk_table], pk_tbl["_valid"])
+            spine_masks[st.spine] = (combined & sub[None, :]) \
+                | (m & ~sub[None, :])
+            join_rids[(st.spine, st.fk_col, st.pk_table)] = rid
+
+        # 4. shared sorts + fused per-query top-n + routing (Gamma): the
+        #    sort runs over the bounded UNION of tuples wanted by the
+        #    node's subscribers (Fig. 4); overflow past the cap is counted.
+        results = {}
+        overflow = jnp.zeros((), jnp.int32)
+        for st, sub in zip(lowered.sorts, sort_subs):
+            mask = spine_masks[st.spine][:, st.wlo:st.whi] & sub[None, :]
+            rows_c, cmask, n_want = ops.compress_union(mask, st.union_cap)
+            overflow += jnp.maximum(n_want - st.union_cap, 0)
+            keys = storage[st.spine][st.col][jnp.maximum(rows_c, 0)]
+            keys = jnp.where(rows_c >= 0,
+                             -keys if st.desc else keys, ops.INT_MAX)
+            perm = jnp.argsort(keys, stable=True)
+            rows = ops.route_topn(cmask[perm],
+                                  limits[st.wlo * 32:st.whi * 32],
+                                  plan.max_results, rows=rows_c[perm])
+            for name, o, c in st.slots:
+                results[name] = {"rows": rows[o:o + c]}
+
+        # 5. shared group-bys (phase 1 shared over the union, phase 2 per
+        #    query)
+        for st in lowered.groups:
+            agg = st.agg
+            tbl = storage[st.spine]
+            rows_c, cmask, n_want = ops.compress_union(
+                spine_masks[st.spine][:, st.wlo:st.whi], st.union_cap)
+            overflow += jnp.maximum(n_want - st.union_cap, 0)
+            safe = jnp.maximum(rows_c, 0)
+            gcodes = jnp.where(rows_c >= 0, tbl[agg.group_col][safe], 0)
+            gvals = jnp.where(rows_c >= 0, tbl[agg.agg_col][safe], 0)
+            count, ssum = backend.groupby(gcodes, gvals, cmask,
+                                          agg.n_groups)
+            score = ssum if agg.order_by == "sum" else count
+            top_val, top_grp = jax.lax.top_k(score.T, agg.top_k)  # [q, K]
+            for name, o, c in st.slots:
+                results[name] = {
+                    "groups": top_grp[o:o + c].astype(jnp.int32),
+                    "scores": top_val[o:o + c],
+                    "counts": jnp.take_along_axis(
+                        count.T[o:o + c], top_grp[o:o + c], axis=1)}
+
+        # 6. unsorted templates route in natural row order — ONE routing
+        #    pass per spine shared by all such templates
+        for st, sub in zip(lowered.routes, route_subs):
+            mask = spine_masks[st.spine][:, st.wlo:st.whi] & sub[None, :]
+            rows_c, cmask, n_want = ops.compress_union(mask, st.union_cap)
+            overflow += jnp.maximum(n_want - st.union_cap, 0)
+            rows = ops.route_topn(cmask, limits[st.wlo * 32:st.whi * 32],
+                                  plan.max_results, rows=rows_c)
+            for name, o, c in st.slots:
+                results[name] = {"rows": rows[o:o + c]}
+        results["_overflow"] = overflow
+
+        # attach join rids so hosts can materialize joined tuples
+        results["_join_rids"] = join_rids
+        return storage, results
+
+    return cycle

@@ -15,19 +15,19 @@ plan shared by every concurrent query:
      space; per-node subscriber bitmasks select which queries a node's
      output applies to (queries become data).
 
-The compiled plan is a pure function executed once per heartbeat
-(executor.py); its jitted XLA executable is the paper's always-on plan.
+The compiled plan is then LOWERED to an explicit staged operator graph
+(lowering.py) whose hot loops resolve through the operator-backend
+registry (backends.py: jnp reference ops or Pallas TPU kernels), and the
+resulting pure cycle function executes once per heartbeat (executor.py);
+its jitted XLA executable is the paper's always-on plan.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dataquery as dq
 from repro.core import operators as ops
 from repro.core.storage import Catalog
 
@@ -160,7 +160,9 @@ class CompiledPlan:
 
 
 def compile_plan(catalog: Catalog, templates: List[QueryTemplate],
-                 caps: Dict[str, int], max_results: int = 64) -> CompiledPlan:
+                 caps: Dict[str, int], max_results: int = 64,
+                 union_cap: int = 8192,
+                 group_union_cap: int = 16384) -> CompiledPlan:
     offsets, off = {}, 0
     for t in templates:
         offsets[t.name] = off
@@ -214,7 +216,8 @@ def compile_plan(catalog: Catalog, templates: List[QueryTemplate],
         caps=dict(caps), offsets=offsets, qcap=qcap,
         scans=scans, joins=list(joins.values()),
         sorts=list(sorts.values()), groups=list(groups.values()),
-        max_results=max_results)
+        max_results=max_results,
+        union_cap=union_cap, group_union_cap=group_union_cap)
 
 
 # ---------------------------------------------------------------------------
@@ -225,166 +228,21 @@ def compile_plan(catalog: Catalog, templates: List[QueryTemplate],
 def build_cycle_fn(plan: CompiledPlan, update_slots, kernels: str = "auto"):
     """Returns cycle(storage, queries, updates) -> (storage', results).
 
+    Lowers the compiled plan to the staged operator graph (lowering.py)
+    and binds each stage to an operator backend (backends.py):
+
+      kernels="jnp"    -> pure-jnp reference operators (the oracle)
+      kernels="pallas" -> Pallas TPU kernels (interpret mode off-TPU)
+      kernels="auto"   -> REPRO_KERNELS override if set, else Pallas on
+                          TPU and jnp elsewhere
+
     queries: {template: {"params": int32[cap, n_preds, 2],
                           "active": bool[cap]}}
     updates: {table: update batch dict (see storage.empty_update_batch)}
     results: per template row-id matrices / group top-k; all fixed shapes.
     """
-    from repro.core.storage import apply_updates
+    from repro.core.backends import resolve_backend
+    from repro.core.lowering import build_cycle, lower_plan
 
-    cat = plan.catalog
-    W = plan.qcap // 32
-    # precompute static subscriber masks
-    join_subs = [jnp.asarray(plan.sub_mask(j.subscribers)) for j in plan.joins]
-    sort_subs = [jnp.asarray(plan.sub_mask(s.subscribers)) for s in plan.sorts]
-
-    # per-template static n-limit vector for shared top-n
-    limits = np.ones(plan.qcap, np.int32)
-    for name, t in plan.templates.items():
-        o, c = plan.offsets[name], plan.caps[name]
-        limits[o:o + c] = min(t.limit, plan.max_results)
-    limits = jnp.asarray(limits)
-
-    def cycle(storage, queries, updates):
-        # 1. apply updates in arrival order (cycle-consistent snapshot)
-        storage = dict(storage)
-        for table, batch in updates.items():
-            storage[table] = apply_updates(cat.schemas[table],
-                                           storage[table], batch)
-
-        # 2. shared scans (ClockScan): one pass per table for ALL queries.
-        #    Each scan only evaluates the word window of templates that
-        #    reference its table (zero elsewhere: nobody subscribed).
-        scan_masks = {}
-        W_full = plan.qcap // 32
-        for table, node in plan.scans.items():
-            tbl = storage[table]
-            C = max(len(node.cols), 1)
-            T = cat.schemas[table].capacity
-            wlo, whi = plan.word_range(node.referencing)
-            q_sub = (whi - wlo) * 32
-            base = wlo * 32
-            lo = jnp.full((C, q_sub), INT_MAX, jnp.int32)  # default: fail
-            hi = jnp.full((C, q_sub), INT_MIN, jnp.int32)
-            # referencing templates: default pass-all on their slots
-            for name in node.referencing:
-                o, c = plan.offsets[name] - base, plan.caps[name]
-                act = queries[name]["active"]
-                lo = lo.at[:, o:o + c].set(
-                    jnp.where(act[None, :], INT_MIN, INT_MAX))
-                hi = hi.at[:, o:o + c].set(
-                    jnp.where(act[None, :], INT_MAX, INT_MIN))
-            # bound predicated columns from query params
-            for name, col_idx, param_idx in node.bindings:
-                o, c = plan.offsets[name] - base, plan.caps[name]
-                act = queries[name]["active"]
-                p = queries[name]["params"][:, param_idx]     # [cap, 2]
-                lo = lo.at[col_idx, o:o + c].set(
-                    jnp.where(act, p[:, 0], INT_MAX))
-                hi = hi.at[col_idx, o:o + c].set(
-                    jnp.where(act, p[:, 1], INT_MIN))
-            cols = (jnp.stack([tbl[c] for c in node.cols])
-                    if node.cols else jnp.zeros((1, T), jnp.int32))
-            m = ops.shared_scan(cols, lo, hi, tbl["_valid"])
-            scan_masks[table] = jnp.pad(m, ((0, 0), (wlo, W_full - whi)))
-
-        # 3. shared joins: ONE big join per signature, query_id in the
-        #    predicate via bitmask intersection; non-subscribers pass through
-        spine_masks = {t: scan_masks[t] for t in plan.scans}
-        join_rids = {}
-        for node, sub in zip(plan.joins, join_subs):
-            tbl = storage[node.spine]
-            pk_schema = cat.schemas[node.pk_table]
-            rid, combined = ops.shared_join_fk(
-                tbl[node.fk_col], spine_masks[node.spine],
-                storage[node.pk_table]["_pk_index"],
-                scan_masks[node.pk_table])
-            m = spine_masks[node.spine]
-            spine_masks[node.spine] = (combined & sub[None, :]) \
-                | (m & ~sub[None, :])
-            join_rids[(node.spine, node.fk_col, node.pk_table)] = rid
-
-        # 4. shared sorts + fused per-query top-n + routing (Gamma).
-        #    Per the paper (Fig. 4), the sort runs over the UNION of
-        #    tuples wanted by the node's subscribers — extracted with a
-        #    bounded cap; each node only touches its subscribers' words.
-        results = {}
-        routed = set()
-        overflow = jnp.zeros((), jnp.int32)
-        for node, sub in zip(plan.sorts, sort_subs):
-            wlo, whi = plan.word_range(node.subscribers)
-            mask = spine_masks[node.spine][:, wlo:whi] \
-                & sub[None, wlo:whi]
-            T = cat.schemas[node.spine].capacity
-            cap = min(T, plan.union_cap)
-            rows_c, cmask, n_want = ops.compress_union(mask, cap)
-            overflow += jnp.maximum(n_want - cap, 0)
-            keys = storage[node.spine][node.col][
-                jnp.maximum(rows_c, 0)]
-            keys = jnp.where(rows_c >= 0,
-                             -keys if node.desc else keys, ops.INT_MAX)
-            perm = jnp.argsort(keys, stable=True)
-            rows = ops.route_topn(cmask[perm],
-                                  limits[wlo * 32:whi * 32],
-                                  plan.max_results, rows=rows_c[perm])
-            for name in node.subscribers:
-                o, c = plan.offsets[name], plan.caps[name]
-                results[name] = {"rows": rows[o - wlo * 32:
-                                              o - wlo * 32 + c]}
-                routed.add(name)
-
-        # 5. shared group-bys (phase 1 shared over the union, phase 2 per
-        #    query)
-        for node in plan.groups:
-            agg = node.agg
-            tbl = storage[node.spine]
-            wlo, whi = plan.word_range(node.subscribers)
-            T = cat.schemas[node.spine].capacity
-            cap = min(T, plan.group_union_cap)
-            rows_c, cmask, n_want = ops.compress_union(
-                spine_masks[node.spine][:, wlo:whi], cap)
-            overflow += jnp.maximum(n_want - cap, 0)
-            safe = jnp.maximum(rows_c, 0)
-            gcodes = jnp.where(rows_c >= 0, tbl[agg.group_col][safe], 0)
-            gvals = jnp.where(rows_c >= 0, tbl[agg.agg_col][safe], 0)
-            count, ssum = ops.shared_groupby(gcodes, gvals, cmask,
-                                             agg.n_groups)
-            score = ssum if agg.order_by == "sum" else count
-            top_val, top_grp = jax.lax.top_k(score.T, agg.top_k)  # [q, K]
-            for name in node.subscribers:
-                o = plan.offsets[name] - wlo * 32
-                c = plan.caps[name]
-                results[name] = {
-                    "groups": top_grp[o:o + c].astype(jnp.int32),
-                    "scores": top_val[o:o + c],
-                    "counts": jnp.take_along_axis(
-                        count.T[o:o + c], top_grp[o:o + c], axis=1)}
-                routed.add(name)
-
-        # 6. unsorted templates route in natural row order — ONE routing
-        #    pass per spine shared by all such templates
-        by_spine: Dict[str, List[str]] = {}
-        for name, t in plan.templates.items():
-            if name not in routed:
-                by_spine.setdefault(t.spine, []).append(name)
-        for spine, names in by_spine.items():
-            wlo, whi = plan.word_range(names)
-            sub = jnp.asarray(plan.sub_mask(names))
-            mask = spine_masks[spine][:, wlo:whi] & sub[None, wlo:whi]
-            T = cat.schemas[spine].capacity
-            cap = min(T, plan.union_cap)
-            rows_c, cmask, n_want = ops.compress_union(mask, cap)
-            overflow += jnp.maximum(n_want - cap, 0)
-            rows = ops.route_topn(cmask, limits[wlo * 32:whi * 32],
-                                  plan.max_results, rows=rows_c)
-            for name in names:
-                o, c = plan.offsets[name], plan.caps[name]
-                results[name] = {"rows": rows[o - wlo * 32:
-                                              o - wlo * 32 + c]}
-        results["_overflow"] = overflow
-
-        # attach join rids so hosts can materialize joined tuples
-        results["_join_rids"] = join_rids
-        return storage, results
-
-    return cycle
+    del update_slots  # batch shapes are carried by the update batches
+    return build_cycle(lower_plan(plan), resolve_backend(kernels))

@@ -31,8 +31,16 @@ class TableSchema:
     name: str
     columns: Tuple[str, ...]
     capacity: int
-    pk: Optional[str] = None      # primary-key column (dense int domain)
-    key_space: int = 0            # max pk value + 1 (dense index size)
+    pk: Optional[str] = None      # primary-key column
+    # max pk value + 1 (dense index size).  key_space == 0 with pk set
+    # means "unique key but unbounded domain": no dense index is kept and
+    # shared joins into the table lower to the blocked key-equality
+    # kernel instead of the O(1) index gather (see core/lowering.py).
+    key_space: int = 0
+
+    @property
+    def indexed(self) -> bool:
+        return bool(self.pk) and self.key_space > 0
 
 
 def empty_table(schema: TableSchema) -> Dict:
@@ -41,7 +49,7 @@ def empty_table(schema: TableSchema) -> Dict:
     t["_valid"] = jnp.zeros((schema.capacity,), bool)
     t["_n"] = jnp.zeros((), jnp.int32)       # append cursor
     t["_version"] = jnp.zeros((), jnp.int32)
-    if schema.pk:
+    if schema.indexed:
         t["_pk_index"] = jnp.full((schema.key_space,), -1, jnp.int32)
     return t
 
@@ -56,7 +64,7 @@ def bulk_load(schema: TableSchema, data: Dict[str, jnp.ndarray]) -> Dict:
         t[c] = t[c].at[:n].set(col)
     t["_valid"] = t["_valid"].at[:n].set(True)
     t["_n"] = jnp.int32(n)
-    if schema.pk:
+    if schema.indexed:
         t["_pk_index"] = t["_pk_index"].at[t[schema.pk][:n]].set(
             jnp.arange(n, dtype=jnp.int32))
     return t
@@ -75,19 +83,47 @@ class UpdateSlots:
     n_delete: int
 
 
-def empty_update_batch(schema: TableSchema, slots: UpdateSlots) -> Dict:
+# numpy-compatible fill defaults for the mutable batch fields — the
+# executor's preallocated staging buffers reset exactly these between
+# heartbeats (everything else is masked out and may hold stale values)
+UPDATE_BATCH_RESET = {"ins_mask": False, "upd_mask": False,
+                      "del_mask": False, "upd_key": -1, "del_key": -1}
+
+
+def empty_update_batch(schema: TableSchema, slots: UpdateSlots,
+                       xp=jnp) -> Dict:
+    """One table's fixed-capacity update batch.
+
+    ``xp`` selects the array namespace: jnp for device batches, np for
+    the executor's preallocated host staging buffers — ONE layout
+    definition either way.
+    """
+    int32 = xp.int32
     return {
-        "ins_rows": {c: jnp.zeros((slots.n_insert,), jnp.int32)
+        "ins_rows": {c: xp.zeros((slots.n_insert,), int32)
                      for c in schema.columns},
-        "ins_mask": jnp.zeros((slots.n_insert,), bool),
+        "ins_mask": xp.zeros((slots.n_insert,), bool),
         # updates: set column `upd_col[i]` of row with pk `upd_key[i]`
-        "upd_key": jnp.full((slots.n_update,), -1, jnp.int32),
-        "upd_col": jnp.zeros((slots.n_update,), jnp.int32),
-        "upd_val": jnp.zeros((slots.n_update,), jnp.int32),
-        "upd_mask": jnp.zeros((slots.n_update,), bool),
-        "del_key": jnp.full((slots.n_delete,), -1, jnp.int32),
-        "del_mask": jnp.zeros((slots.n_delete,), bool),
+        "upd_key": xp.full((slots.n_update,), -1, int32),
+        "upd_col": xp.zeros((slots.n_update,), int32),
+        "upd_val": xp.zeros((slots.n_update,), int32),
+        "upd_mask": xp.zeros((slots.n_update,), bool),
+        "del_key": xp.full((slots.n_delete,), -1, int32),
+        "del_mask": xp.zeros((slots.n_delete,), bool),
     }
+
+
+def locate_rows_by_key(keys_col, probe, valid):
+    """Row holding key ``probe[i]`` among valid rows (-1 = absent).
+
+    Broadcast key-equality scan for tables WITHOUT a dense pk index
+    (schema.indexed == False); keys are unique among valid rows, a
+    duplicate would resolve to the max row id.  Shared by the storage
+    update path and the baseline engine's non-indexed join.
+    """
+    eq = (keys_col[None, :] == probe[:, None]) & valid[None, :]
+    rows = jnp.arange(keys_col.shape[0], dtype=jnp.int32)
+    return jnp.max(jnp.where(eq, rows[None, :], -1), axis=1)
 
 
 def apply_updates(schema: TableSchema, table: Dict, batch: Dict) -> Dict:
@@ -99,19 +135,29 @@ def apply_updates(schema: TableSchema, table: Dict, batch: Dict) -> Dict:
     n = t["_n"]
 
     if schema.pk:
+        def locate(keys, mask, valid):
+            """Row holding pk `keys[i]` (-1 absent/masked): an O(1) index
+            gather when the dense index exists, else a key-equality scan
+            over the column (the block-join tables' path)."""
+            if schema.indexed:
+                return jnp.where(mask, t["_pk_index"][keys], -1)
+            return jnp.where(
+                mask, locate_rows_by_key(t[schema.pk], keys, valid), -1)
+
         # deletes: invalidate row, clear pk index
-        del_row = jnp.where(batch["del_mask"],
-                            t["_pk_index"][batch["del_key"]], -1)
+        del_row = locate(batch["del_key"], batch["del_mask"], t["_valid"])
         ok = del_row >= 0
         t["_valid"] = t["_valid"].at[jnp.where(ok, del_row, 0)].set(
             jnp.where(ok, False, t["_valid"][0]))
-        t["_pk_index"] = t["_pk_index"].at[
-            jnp.where(ok, batch["del_key"], schema.key_space)].set(
-            -1, mode="drop")
+        if schema.indexed:
+            t["_pk_index"] = t["_pk_index"].at[
+                jnp.where(ok, batch["del_key"], schema.key_space)].set(
+                -1, mode="drop")
 
-        # point updates by pk: scatter into (row, col)
-        upd_row = jnp.where(batch["upd_mask"],
-                            t["_pk_index"][batch["upd_key"]], -1)
+        # point updates by pk: scatter into (row, col).  Post-delete
+        # `_valid`/index so a delete-then-update of the same key in one
+        # batch finds nothing, matching arrival-order semantics.
+        upd_row = locate(batch["upd_key"], batch["upd_mask"], t["_valid"])
         for ci, c in enumerate(schema.columns):
             sel = (batch["upd_col"] == ci) & (upd_row >= 0)
             rows = jnp.where(sel, upd_row, schema.capacity)
@@ -126,7 +172,7 @@ def apply_updates(schema: TableSchema, table: Dict, batch: Dict) -> Dict:
         t[c] = t[c].at[rows].set(batch["ins_rows"][c], mode="drop")
     t["_valid"] = t["_valid"].at[rows].set(True, mode="drop")
     n_new = n + jnp.sum(batch["ins_mask"].astype(jnp.int32))
-    if schema.pk:
+    if schema.indexed:
         keys = jnp.where(batch["ins_mask"], batch["ins_rows"][schema.pk],
                          schema.key_space)
         t["_pk_index"] = t["_pk_index"].at[keys].set(

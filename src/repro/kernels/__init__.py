@@ -3,4 +3,40 @@
 Layout per kernel: <name>.py holds the pl.pallas_call + BlockSpec tiling;
 ref.py holds pure-jnp oracles; ops.py holds the jit'd dispatch wrappers
 (ref path on CPU, Pallas on TPU, interpret=True for CPU validation).
+
+Importing this package registers the ``pallas`` operator backend with
+repro.core.backends, which is how the lowered global plan selects the
+kernels (``build_cycle_fn(..., kernels="pallas")`` or ``"auto"`` on TPU).
+The kernel modules themselves are imported lazily, at first call.
 """
+from __future__ import annotations
+
+import jax
+
+from repro.core import backends as _backends
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pallas_scan(cols, lo, hi, valid):
+    from repro.kernels.clockscan import clockscan_pallas
+    return clockscan_pallas(cols, lo, hi, valid, interpret=_interpret())
+
+
+def _pallas_join_block(keys_l, mask_l, keys_r, mask_r, valid_r):
+    from repro.kernels.bitmask_join import bitmask_join_pallas
+    return bitmask_join_pallas(keys_l, mask_l, keys_r, mask_r, valid_r,
+                               interpret=_interpret())
+
+
+def _pallas_groupby(group_code, values, mask, n_groups: int):
+    from repro.kernels.shared_groupby import shared_groupby_pallas
+    return shared_groupby_pallas(group_code, values, mask, n_groups,
+                                 interpret=_interpret())
+
+
+_backends.register_backend(_backends.OperatorBackend(
+    name="pallas", scan=_pallas_scan, join_block=_pallas_join_block,
+    groupby=_pallas_groupby))

@@ -60,12 +60,24 @@ def _kernel(keys_l_ref, mask_l_ref, keys_r_ref, mask_r_ref, valid_r_ref,
 
 def bitmask_join_pallas(keys_l, mask_l, keys_r, mask_r, valid_r, *,
                         interpret: bool = True):
-    Tl, W = mask_l.shape
-    Tr = keys_r.shape[0]
+    Tl_orig, W = mask_l.shape
+    Tr_orig = keys_r.shape[0]
+    # arbitrary table capacities: pad to tile multiples (padded right rows
+    # are invalid so they can never match; padded left rows are sliced
+    # off), matching clockscan/shared_groupby's internal padding
+    pad_l = (-Tl_orig) % min(TILE_L, max(Tl_orig, 1))
+    pad_r = (-Tr_orig) % min(TILE_R, max(Tr_orig, 1))
+    if pad_l:
+        keys_l = jnp.pad(keys_l, (0, pad_l))
+        mask_l = jnp.pad(mask_l, ((0, pad_l), (0, 0)))
+    if pad_r:
+        keys_r = jnp.pad(keys_r, (0, pad_r))
+        mask_r = jnp.pad(mask_r, ((0, pad_r), (0, 0)))
+        valid_r = jnp.pad(valid_r, (0, pad_r))
+    Tl, Tr = Tl_orig + pad_l, Tr_orig + pad_r
     tl, tr = min(TILE_L, Tl), min(TILE_R, Tr)
-    assert Tl % tl == 0 and Tr % tr == 0
     kernel = functools.partial(_kernel, n_right_tiles=Tr // tr, tile_r=tr)
-    return pl.pallas_call(
+    rid, mask = pl.pallas_call(
         kernel,
         grid=(Tl // tl, Tr // tr),
         in_specs=[
@@ -85,3 +97,4 @@ def bitmask_join_pallas(keys_l, mask_l, keys_r, mask_r, valid_r, *,
         ],
         interpret=interpret,
     )(keys_l, mask_l, keys_r, mask_r, valid_r)
+    return rid[:Tl_orig], mask[:Tl_orig]

@@ -92,6 +92,7 @@ class CycleServer:
         self._slots: List[Optional[Request]] = [None] * capacity
         self._pos = np.zeros(capacity, np.int64)
         self._last_tok = np.zeros(capacity, np.int64)
+        self._pending_logits = None
         self.cycles = 0
         self.completed: List[Request] = []
 
@@ -126,8 +127,6 @@ class CycleServer:
             req = self._queue.popleft()
             budget -= 1
             P = self.prefill_len
-            toks = (req.prompt[-P:] + [0] * P)[:P] if len(req.prompt) < P \
-                else req.prompt[-P:]
             toks = np.asarray(req.prompt[-P:] if len(req.prompt) >= P
                               else req.prompt + [0] * (P - len(req.prompt)),
                               np.int32)
@@ -149,13 +148,35 @@ class CycleServer:
             self._pos[slot] = min(len(req.prompt), P)
             self._last_tok[slot] = tok
 
-    def run_cycle(self) -> List[Request]:
-        """One heartbeat: admit + prefill, then ONE shared decode step."""
+    def dispatch(self) -> None:
+        """Admit + prefill, then launch ONE shared decode step for all
+        active slots.  Returns while the device still computes (JAX async
+        dispatch) — the same dispatch/collect heartbeat protocol as
+        core/executor.SharedDBEngine, so host-side routing of cycle N can
+        overlap device execution."""
+        if self._pending_logits is not None:
+            raise RuntimeError(
+                "dispatch() with a decode step already in flight: decode "
+                "N+1 consumes N's tokens, collect() the previous cycle "
+                "first")
         self._admit()
         tokens = jnp.asarray(self._last_tok[:, None], jnp.int32)
         positions = jnp.asarray(self._pos, jnp.int32)
         logits, self.cache = self._decode(self.params, self.cache, tokens,
                                           positions)
+        self._pending_logits = logits
+
+    def collect(self) -> List[Request]:
+        """Synchronize on the in-flight decode step and route tokens.
+
+        Unlike the relational engine, decode step N+1 consumes step N's
+        argmax (the token feedback loop), so the serving pipeline depth is
+        one: dispatch/collect split the heartbeat but cannot run two
+        device cycles concurrently."""
+        if self._pending_logits is None:
+            return []          # nothing in flight (mirrors SharedDBEngine)
+        logits = self._pending_logits
+        self._pending_logits = None
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         finished = []
         now = time.time()
@@ -173,6 +194,11 @@ class CycleServer:
                 self._slots[slot] = None
         self.cycles += 1
         return finished
+
+    def run_cycle(self) -> List[Request]:
+        """One heartbeat: admit + prefill, ONE shared decode step, route."""
+        self.dispatch()
+        return self.collect()
 
     def run_until_drained(self, max_cycles: int = 10000) -> List[Request]:
         out = []

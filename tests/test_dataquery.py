@@ -1,7 +1,10 @@
 """Property tests for the data-query model (packed query bitmasks)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import dataquery as dq
 

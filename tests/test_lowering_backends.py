@@ -1,0 +1,294 @@
+"""Lowering layer (staged operator graph) + backend registry tests:
+stage metadata tightness, jnp/pallas resolution, kernel-path parity with
+the reference path over the TPC-W templates, and bounded-union overflow
+accounting."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backends, operators as ops
+from repro.core.executor import SharedDBEngine
+from repro.core.lowering import build_cycle, lower_plan
+from repro.core.plan import (Join, Pred, QueryTemplate, GroupAgg,
+                             compile_plan)
+from repro.core.storage import Catalog, TableSchema, UpdateSlots
+from repro.workloads import tpcw
+
+INT_MAX = 2147483647
+
+
+# ------------------------------------------------------------- lowering IR
+def test_lowered_graph_covers_plan_and_routes_every_template():
+    plan = tpcw.build_tpcw_plan(400, 1200)
+    low = lower_plan(plan)
+    assert {s.table for s in low.scans} == set(plan.scans)
+    assert len(low.joins) == len(plan.joins)
+    assert len(low.sorts) == len(plan.sorts)
+    assert len(low.groups) == len(plan.groups)
+    # every template gets exactly one result-producing stage
+    producers = [name for st in low.sorts + low.groups + low.routes
+                 for name, _, _ in st.slots]
+    assert sorted(producers) == sorted(plan.templates)
+    # stage order is the paper's pipeline: scans, joins, sorts/groups,
+    # routing
+    kinds = [k for k, _ in low.stages()]
+    assert kinds == sorted(kinds, key=["scan", "join", "sort", "group",
+                                       "route"].index)
+
+
+def test_word_range_windows_are_tight():
+    """Per-node word windows cover exactly the subscribers' slot words:
+    the per-operator mask work scales with the operator's own capacity,
+    never the global query capacity."""
+    plan = tpcw.build_tpcw_plan(400, 1200)
+    subscriber_sets = (
+        [n.referencing for n in plan.scans.values()]
+        + [n.subscribers for n in plan.joins + plan.sorts + plan.groups])
+    for names in subscriber_sets:
+        wlo, whi = plan.word_range(names)
+        lo = min(plan.offsets[n] for n in names)
+        hi = max(plan.offsets[n] + plan.caps[n] for n in names)
+        assert wlo == lo // 32
+        assert whi == -(-hi // 32)
+        sub = plan.sub_mask(names)
+        # boundary words are populated, everything outside is zero
+        assert sub[wlo] != 0 and sub[whi - 1] != 0
+        assert not sub[:wlo].any() and not sub[whi:].any()
+
+
+def test_lowered_slots_are_window_relative():
+    plan = tpcw.build_tpcw_plan(400, 1200)
+    low = lower_plan(plan)
+    for st in low.sorts + low.groups + low.routes:
+        for name, o, c in st.slots:
+            assert o == plan.offsets[name] - st.wlo * 32
+            assert 0 <= o and o + c <= (st.whi - st.wlo) * 32
+
+
+# ------------------------------------------------------ backend resolution
+def test_backend_registry_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNELS", raising=False)
+    assert backends.resolve_backend("jnp").name == "jnp"
+    assert backends.resolve_backend("ref").name == "jnp"
+    assert backends.resolve_backend("pallas").name == "pallas"
+    # auto on CPU -> the reference backend
+    assert backends.resolve_backend("auto").name == "jnp"
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    assert backends.resolve_backend("auto").name == "pallas"
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    assert backends.resolve_backend("auto").name == "jnp"
+    # "auto" in the env var falls through to device-based choice
+    monkeypatch.setenv("REPRO_KERNELS", "auto")
+    assert backends.resolve_backend("auto").name == "jnp"
+    monkeypatch.setenv("REPRO_KERNELS", "cuda")
+    with pytest.raises(ValueError, match="REPRO_KERNELS"):
+        backends.resolve_backend("auto")
+    monkeypatch.delenv("REPRO_KERNELS")
+    with pytest.raises(ValueError):
+        backends.resolve_backend("cuda")
+    with pytest.raises(KeyError):
+        backends.get_backend("nope")
+    assert set(backends.available_backends()) >= {"jnp", "pallas"}
+
+
+def test_join_block_backend_parity_non_tile_multiple():
+    """The pallas join_block pads to tile multiples; parity with the jnp
+    oracle on deliberately awkward (non-multiple-of-256) shapes."""
+    rng = np.random.default_rng(11)
+    Tl, Tr, W = 300, 130, 2
+    keys_r = jnp.asarray(rng.permutation(Tr * 3)[:Tr], jnp.int32)
+    keys_l = jnp.asarray(rng.choice(Tr * 4, Tl), jnp.int32)
+    mask_l = jnp.asarray(rng.integers(0, 2**32, (Tl, W)), jnp.uint32)
+    mask_r = jnp.asarray(rng.integers(0, 2**32, (Tr, W)), jnp.uint32)
+    valid_r = jnp.asarray(rng.random(Tr) > 0.25)
+    r1, m1 = backends.get_backend("jnp").join_block(
+        keys_l, mask_l, keys_r, mask_r, valid_r)
+    r2, m2 = backends.get_backend("pallas").join_block(
+        keys_l, mask_l, keys_r, mask_r, valid_r)
+    assert (np.asarray(r1) == np.asarray(r2)).all()
+    assert (np.asarray(m1) == np.asarray(m2)).all()
+
+
+# -------------------------------------- block-join access path (no index)
+def _block_join_world(kernels: str):
+    """A PK table with key_space=0: no dense index, so lowering picks the
+    blocked key-equality join instead of the index gather."""
+    cat = Catalog([
+        TableSchema("fact", ("f_id", "f_ref", "f_val"), 64),
+        TableSchema("dim", ("d_key", "d_attr"), 32, pk="d_key",
+                    key_space=0),
+    ])
+    tpl = QueryTemplate("by_val", "fact",
+                        preds=(Pred("fact", "f_val"),),
+                        joins=(Join("f_ref", "dim"),), limit=64)
+    plan = compile_plan(cat, [tpl], {"by_val": 32}, max_results=64)
+    rng = np.random.default_rng(4)
+    d_key = np.arange(0, 32 * 7, 7)          # sparse, non-dense keys
+    data = {
+        "fact": {"f_id": np.arange(64),
+                 "f_ref": rng.choice(np.concatenate([d_key, [-1, 999]]),
+                                     64),
+                 "f_val": rng.integers(0, 10, 64)},
+        "dim": {"d_key": d_key, "d_attr": np.arange(32)},
+    }
+    eng = SharedDBEngine(plan, UpdateSlots(2, 2, 2), data, jit=False,
+                         kernels=kernels)
+    return plan, data, eng
+
+
+def test_lowering_selects_block_join_without_dense_index():
+    plan, data, eng = _block_join_world("jnp")
+    low = lower_plan(plan)
+    assert [j.kind for j in low.joins] == ["block"]
+    t = eng.submit("by_val", {0: (3, 5)})
+    eng.run_cycle()
+    rows = set(int(r) for r in np.asarray(t.result["rows"]) if r >= 0)
+    valid_refs = set(data["dim"]["d_key"].tolist())
+    want = {i for i in range(64)
+            if 3 <= data["fact"]["f_val"][i] <= 5
+            and int(data["fact"]["f_ref"][i]) in valid_refs}
+    assert rows == want
+    # the query-at-a-time baseline supports the same index-less schema
+    from repro.core.baseline import QueryAtATimeEngine
+    base = QueryAtATimeEngine(plan, data, jit=False)
+    b = base.execute("by_val", {0: (3, 5)})
+    assert set(int(r) for r in b.result["rows"] if r >= 0) == want
+
+
+def test_mutations_apply_without_dense_index():
+    """Deletes and point-updates on an index-less PK table locate rows by
+    key-equality scan — they must commit, not silently drop."""
+    plan, data, eng = _block_join_world("jnp")
+    t0 = eng.submit("by_val", {0: (0, 9)})
+    eng.run_cycle()
+    rows0 = set(int(r) for r in np.asarray(t0.result["rows"]) if r >= 0)
+    victim = sorted(rows0)[0]
+    victim_key = int(data["fact"]["f_ref"][victim])
+    # delete the dim row the victim fact joins to: victim must vanish
+    eng.submit_update("dim", "delete", {"key": victim_key})
+    t1 = eng.submit("by_val", {0: (0, 9)})
+    eng.run_cycle()
+    rows1 = set(int(r) for r in np.asarray(t1.result["rows"]) if r >= 0)
+    gone = {i for i in rows0 if int(data["fact"]["f_ref"][i]) == victim_key}
+    assert rows1 == rows0 - gone
+    # point-update a surviving dim row's attribute by key
+    other = sorted(rows1)[0]
+    other_key = int(data["fact"]["f_ref"][other])
+    eng.submit_update("dim", "update",
+                      {"key": other_key, "col": "d_attr", "val": 777})
+    eng.run_cycle()
+    d_row = np.asarray(eng.state["dim"]["d_key"]).tolist().index(other_key)
+    assert int(np.asarray(eng.state["dim"]["d_attr"])[d_row]) == 777
+    # delete-then-update of the SAME key in one batch: update finds
+    # nothing (arrival-order semantics, matching the indexed path)
+    eng.submit_update("dim", "delete", {"key": other_key})
+    eng.submit_update("dim", "update",
+                      {"key": other_key, "col": "d_attr", "val": 888})
+    eng.run_cycle()
+    assert int(np.asarray(eng.state["dim"]["d_attr"])[d_row]) == 777
+    assert not bool(np.asarray(eng.state["dim"]["_valid"])[d_row])
+
+
+def test_block_join_engine_parity_jnp_vs_pallas():
+    _, _, e1 = _block_join_world("jnp")
+    _, _, e2 = _block_join_world("pallas")
+    t1 = e1.submit("by_val", {0: (0, 9)})
+    t2 = e2.submit("by_val", {0: (0, 9)})
+    e1.run_cycle()
+    e2.run_cycle()
+    assert (np.asarray(t1.result["rows"])
+            == np.asarray(t2.result["rows"])).all()
+
+
+# ----------------------------------------- full-stack jnp vs pallas parity
+def test_engine_jnp_vs_pallas_parity_over_tpcw_templates():
+    """Acceptance: kernels="jnp" and kernels="pallas" (interpret mode on
+    CPU) produce identical results across the TPC-W templates."""
+    rng = np.random.default_rng(5)
+    plan = tpcw.build_tpcw_plan(128, 256)
+    data = tpcw.generate_data(rng, 128, 256)
+    queries = [
+        ("get_customer", {0: (7, 7)}),
+        ("get_password", {0: (3, 3)}),
+        ("get_book", {0: (5, 5)}),
+        ("get_related", {0: (9, 9)}),
+        ("admin_item", {0: (1, 1)}),
+        ("search_subject", {0: (3, 3)}),
+        ("search_title", {0: (40, 60)}),
+        ("search_author", {0: (100, 120)}),
+        ("new_products", {0: (2, 2)}),
+        ("best_sellers", {0: (0, INT_MAX), 1: (2, 2)}),
+        ("order_lines", {0: (10, 10)}),
+        ("order_display", {0: (17, 17)}),
+        ("get_cart", {0: (12, 12)}),
+    ]
+    engines, tickets = [], []
+    for kernels in ("jnp", "pallas"):
+        eng = SharedDBEngine(plan, tpcw.DEFAULT_UPDATE_SLOTS, data,
+                             jit=False, kernels=kernels)
+        tickets.append([eng.submit(n, p) for n, p in queries])
+        eng.run_cycle()
+        engines.append(eng)
+    for a, b in zip(*tickets):
+        assert a.template == b.template
+        if "rows" in a.result:
+            assert (np.asarray(a.result["rows"])
+                    == np.asarray(b.result["rows"])).all(), a.template
+        else:
+            assert (np.asarray(a.result["groups"])
+                    == np.asarray(b.result["groups"])).all()
+            np.testing.assert_allclose(np.asarray(a.result["scores"]),
+                                       np.asarray(b.result["scores"]),
+                                       rtol=1e-5)
+
+
+# -------------------------------------------------- overflow accounting
+def _overflow_world(union_cap: int, group_union_cap: int = 1024):
+    cat = Catalog([TableSchema("t", ("a", "b", "g"), 256)])
+    tpls = [
+        QueryTemplate("sorted_all", "t", preds=(Pred("t", "a"),),
+                      sort_col="b", limit=8),
+        QueryTemplate("grouped_all", "t", preds=(Pred("t", "a"),),
+                      group=GroupAgg("g", 8, "b", top_k=4)),
+    ]
+    plan = compile_plan(cat, tpls, {"sorted_all": 32, "grouped_all": 32},
+                        max_results=8, union_cap=union_cap,
+                        group_union_cap=group_union_cap)
+    rng = np.random.default_rng(0)
+    data = {"t": {"a": np.arange(256), "b": rng.integers(0, 100, 256),
+                  "g": rng.integers(0, 8, 256)}}
+    return SharedDBEngine(plan, UpdateSlots(1, 1, 1), data, jit=False,
+                          kernels="jnp")
+
+
+def test_union_cap_overflow_is_counted():
+    eng = _overflow_world(union_cap=16)
+    eng.submit("sorted_all", {0: (0, INT_MAX)})    # wants all 256 rows
+    eng.run_cycle()
+    assert eng.last_overflow == 256 - 16
+    # a selective query fits the cap: no overflow
+    eng.submit("sorted_all", {0: (0, 4)})
+    eng.run_cycle()
+    assert eng.last_overflow == 0
+
+
+def test_group_union_cap_overflow_is_counted():
+    eng = _overflow_world(union_cap=1024, group_union_cap=32)
+    eng.submit("grouped_all", {0: (0, INT_MAX)})
+    eng.run_cycle()
+    assert eng.last_overflow == 256 - 32
+
+
+def test_overflow_sums_across_stages():
+    eng = _overflow_world(union_cap=16, group_union_cap=32)
+    eng.submit("sorted_all", {0: (0, INT_MAX)})
+    eng.submit("grouped_all", {0: (0, INT_MAX)})
+    eng.run_cycle()
+    assert eng.last_overflow == (256 - 16) + (256 - 32)
+
+
+def test_compress_union_truncates_deterministically_from_tail():
+    mask = jnp.asarray(np.full((40, 1), 1, np.uint32))
+    rows, cmask, n_want = ops.compress_union(mask, 8)
+    assert int(n_want) == 40
+    assert np.asarray(rows).tolist() == list(range(8))

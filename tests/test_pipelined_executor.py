@@ -1,0 +1,206 @@
+"""Pipelined dispatch/collect executor: equivalence with the synchronous
+path, backpressure, latency accounting, snapshot semantics, and the
+shared-vs-query-at-a-time correctness property (deterministic version —
+the hypothesis sweep lives in test_engine.py)."""
+import numpy as np
+import pytest
+
+from repro.core.baseline import QueryAtATimeEngine
+from repro.core.executor import SharedDBEngine
+from repro.workloads import tpcw
+
+SCALE_I, SCALE_C = 400, 1200
+
+
+@pytest.fixture(scope="module")
+def world():
+    rng = np.random.default_rng(3)
+    plan = tpcw.build_tpcw_plan(SCALE_I, SCALE_C)
+    data = tpcw.generate_data(rng, SCALE_I, SCALE_C)
+    shared = SharedDBEngine(plan, tpcw.DEFAULT_UPDATE_SLOTS, data)
+    baseline = QueryAtATimeEngine(plan, data)
+    gen = tpcw.WorkloadGenerator(rng, SCALE_I, SCALE_C)
+    return plan, shared, baseline, gen
+
+
+def _compare(t, r2):
+    if "rows" in t.result:
+        a = set(int(x) for x in np.asarray(t.result["rows"]) if x >= 0)
+        b = set(int(x) for x in r2["rows"] if x >= 0)
+        assert a == b, (t.template, t.params, sorted(a)[:5], sorted(b)[:5])
+    else:
+        np.testing.assert_allclose(np.sort(np.asarray(t.result["scores"])),
+                                   np.sort(np.asarray(r2["scores"])),
+                                   rtol=1e-6)
+
+
+def test_pipelined_shared_equals_query_at_a_time(world):
+    """Paper Fig. 3 correctness through the PIPELINED path: the shared
+    plan with overlapped dispatch/collect == per-query plans."""
+    plan, shared, baseline, gen = world
+    inters = gen.sample_mix("shopping", 40)
+    for it in inters:  # stable snapshot: updates first
+        for u in it.updates:
+            shared.submit_update(*u)
+            baseline.apply_update(*u)
+    shared.run_until_drained(pipelined=True)
+    tickets = []
+    for it in inters:
+        for q in it.queries:
+            tickets.append(shared.submit(*q))
+    shared.run_until_drained(pipelined=True)
+    assert not shared.in_flight()
+    assert all(t.result is not None for t in tickets)
+    for t in tickets:
+        _compare(t, baseline.execute(t.template, t.params).result)
+
+
+def test_dispatch_collect_equals_run_cycle(world):
+    """Explicit dispatch()/collect() routes the same results as the
+    synchronous run_cycle() wrapper."""
+    plan, shared, _, gen = world
+    item = 13
+    t_sync = shared.submit("get_related", {0: (item, item)})
+    shared.run_cycle()
+    t_split = shared.submit("get_related", {0: (item, item)})
+    shared.dispatch()
+    assert shared.in_flight() == 1
+    assert t_split.done_time is None       # not routed until collect
+    out = shared.collect()
+    assert t_split in out["get_related"]
+    assert t_split.done_time is not None
+    assert (np.asarray(t_sync.result["rows"])
+            == np.asarray(t_split.result["rows"])).all()
+
+
+def test_pipeline_backpressure_bounds_inflight(world):
+    """At most pipeline_depth cycles outstanding; every admitted query is
+    still routed exactly once."""
+    plan, shared, _, gen = world
+    cap = plan.caps["admin_item"]
+    tickets = [shared.submit("admin_item", {0: (i % 64, i % 64)})
+               for i in range(cap * 4)]       # 4 cycles worth of backlog
+    n_dispatch = 0
+    while shared.pending():
+        shared.dispatch()
+        n_dispatch += 1
+        assert shared.in_flight() <= shared.pipeline_depth
+    while shared.in_flight():
+        shared.collect()
+    assert n_dispatch == 4
+    assert all(t.result is not None for t in tickets)
+
+
+def test_backpressure_spill_surfaces_in_collect_returns(world):
+    """A cycle collected internally by dispatch() backpressure must still
+    appear in a collect() return — every ticket exactly once."""
+    plan, shared, _, gen = world
+    cap = plan.caps["admin_item"]
+    tickets = [shared.submit("admin_item", {0: (i % 64, i % 64)})
+               for i in range(cap * 3)]      # 3 cycles; depth is 2
+    for _ in range(3):
+        shared.dispatch()                    # 3rd dispatch spills cycle 1
+    seen = []
+    while shared.in_flight() or shared._spilled:
+        seen.extend(shared.collect().get("admin_item", []))
+    assert sorted(t.id for t in seen) == sorted(t.id for t in tickets)
+
+
+def test_pipelined_latency_is_two_cycles_worst_case(world):
+    """A query admitted at dispatch k completes at collect k — queue wait
+    plus execution, never more (paper §3.5)."""
+    plan, shared, _, gen = world
+    before = shared.cycles_run
+    t = shared.submit("get_book", {0: (2, 2)})
+    shared.dispatch()
+    shared.collect()
+    assert t.result is not None
+    assert shared.cycles_run == before + 1
+
+
+def test_snapshot_isolation_and_arrival_order_pipelined(world):
+    """Updates admitted with cycle k are visible to cycle-k queries, and
+    apply in arrival order, under the pipelined admission path."""
+    plan, shared, _, gen = world
+    item = 42
+    t0 = shared.submit("admin_item", {0: (item, item)})
+    shared.run_cycle()
+    old_cost = int(shared.materialize(
+        "item", t0.result["rows"][:1])["i_cost"][0])
+    shared.submit_update("item", "update",
+                         {"key": item, "col": "i_cost",
+                          "val": old_cost + 111})
+    shared.submit_update("item", "update",
+                         {"key": item, "col": "i_cost",
+                          "val": old_cost + 222})
+    t1 = shared.submit("admin_item", {0: (item, item)})
+    shared.dispatch()       # update + query admitted to the same beat
+    shared.collect()
+    row1 = shared.materialize("item", t1.result["rows"][:1])
+    assert int(row1["i_cost"][0]) == old_cost + 222  # last writer wins
+
+
+def test_staging_buffers_are_reused_not_reallocated(world):
+    plan, shared, _, gen = world
+    bufs = [id(b.params[name])
+            for b in shared._staging for name in plan.templates]
+    shared.submit("get_book", {0: (1, 1)})
+    shared.run_cycle()
+    shared.submit("get_book", {0: (2, 2)})
+    shared.run_cycle()
+    after = [id(b.params[name])
+             for b in shared._staging for name in plan.templates]
+    assert bufs == after
+
+
+def test_stale_staging_state_does_not_leak_between_cycles(world):
+    """A template active in cycle k must not ghost-execute in cycle k+1
+    out of the reused staging buffers."""
+    plan, shared, _, gen = world
+    t0 = shared.submit("search_subject", {0: (3, 3)})
+    shared.run_cycle()
+    n0 = (np.asarray(t0.result["rows"]) >= 0).sum()
+    assert n0 > 0
+    # next cycle: a different template only; search_subject inactive
+    t1 = shared.submit("get_password", {0: (5, 5)})
+    out = shared.run_cycle()
+    assert out["search_subject"] == []
+    assert (np.asarray(t1.result["rows"]) >= 0).sum() == 1
+
+
+def test_baseline_dispatch_collect_matches_execute(world):
+    plan, _, baseline, gen = world
+    items = [("get_book", {0: (7, 7)}), ("search_subject", {0: (1, 1)}),
+             ("get_customer", {0: (9, 9)})]
+    sync = [baseline.execute(n, p) for n, p in items]
+    pending = [baseline.dispatch(n, p) for n, p in items]
+    split = [baseline.collect(t) for t in pending]
+    for a, b in zip(sync, split):
+        assert (np.asarray(a.result["rows"])
+                == np.asarray(b.result["rows"])).all()
+
+
+def test_cycle_server_dispatch_collect_protocol():
+    from repro.configs import smoke_config
+    from repro.serving import CycleServer
+    cfg = smoke_config("stablelm-1.6b")
+    srv = CycleServer(cfg, capacity=3, max_seq=32, prefill_len=8,
+                      prefill_budget=2)
+    rng = np.random.default_rng(0)
+    reqs = [srv.submit(rng.integers(1, cfg.vocab, 6).tolist(),
+                       max_new_tokens=4) for _ in range(6)]
+    # explicit split heartbeats drive the server to completion
+    guard = 0
+    while (srv.pending() or srv.active()) and guard < 100:
+        srv.dispatch()
+        srv.collect()
+        guard += 1
+    assert all(len(r.output) == 4 for r in reqs)
+    assert srv.cycles == guard
+    # protocol misuse is explicit, not a crash
+    assert srv.collect() == []               # nothing in flight: no-op
+    srv.submit(rng.integers(1, cfg.vocab, 6).tolist(), max_new_tokens=2)
+    srv.dispatch()
+    with pytest.raises(RuntimeError):
+        srv.dispatch()                       # double dispatch refused
+    srv.collect()
