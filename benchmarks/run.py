@@ -1,19 +1,62 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness: one entry per paper figure (Figs. 7-11) plus the
-beyond-paper roofline report.  ``python -m benchmarks.run [--quick]``."""
+beyond-paper roofline report and the critical-path record.
+
+    python -m benchmarks.run [--quick]   # figures + BENCH_PR2.json
+    python -m benchmarks.run --smoke     # critical path only (CI gate)
+
+Every invocation (re)writes ``BENCH_PR2.json`` — the machine-readable
+perf trajectory: per-heartbeat cycle time, host dispatch/staging time,
+the partitioned-vs-block join scaling curve, and the pipelined/sync
+cycle-time ratio.
+"""
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_PR2.json")
 
 
 def _emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
+def write_bench_json(smoke: bool) -> dict:
+    from benchmarks import critical_path
+    record = {"pr": 2, "mode": "smoke" if smoke else "full",
+              **critical_path.run(smoke=smoke)}
+    path = os.path.abspath(BENCH_JSON)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    big = record["join_scaling"][-1]
+    print(f"== Critical path -> {path} ==", flush=True)
+    print(f"join {big['keys']}x{big['keys']}: partitioned "
+          f"{big['partitioned_us']:.0f}us vs block {big['block_us']:.0f}us "
+          f"({big['speedup']:.1f}x)", flush=True)
+    print(f"staging: packed {record['dispatch']['packed_stage_us']:.0f}us "
+          f"vs per-template "
+          f"{record['dispatch']['per_template_stage_us']:.0f}us "
+          f"({record['dispatch']['stage_speedup']:.1f}x)", flush=True)
+    print(f"cycle: sync {record['cycle']['mean_cycle_us_sync']:.0f}us, "
+          f"pipelined {record['cycle']['mean_cycle_us_pipelined']:.0f}us "
+          f"(ratio {record['cycle']['pipelined_sync_ratio']:.3f})",
+          flush=True)
+    return record
+
+
 def main() -> None:
     quick = "--quick" in sys.argv
     t_start = time.time()
+
+    if "--smoke" in sys.argv:
+        write_bench_json(smoke=True)
+        print(f"total bench wall: {time.time() - t_start:.0f}s", flush=True)
+        return
 
     from benchmarks import (fig7_throughput, fig8_scaling, fig9_interactions,
                             fig10_heavy_light, fig11_interaction,
@@ -67,6 +110,8 @@ def main() -> None:
     for arch, shape, r in roofline_report.run():
         _emit(f"roofline_{arch}_{shape}", r["step_time_s"] * 1e6,
               f"dom={r['dominant']};frac={r['roofline_fraction']:.3f}")
+
+    write_bench_json(smoke=quick)
 
     print(f"total bench wall: {time.time() - t_start:.0f}s", flush=True)
 

@@ -11,10 +11,12 @@ registry at plan-build time.  Two backends ship:
                  shared_groupby.py), run in interpret mode off-TPU so the
                  full engine path stays testable on CPU.
 
-Backend surface (the three shared-operator hot loops):
+Backend surface (the shared-operator hot loops):
 
   scan(cols, lo, hi, valid)                 -> uint32[T, W]   (ClockScan)
   join_block(kl, ml, kr, mr, valid_r)       -> (rid, mask)    (shared join)
+  join_partitioned(kl, ml, bkeys, brows,
+                   bounds, mr)              -> (rid, mask)    (bucketed join)
   groupby(codes, vals, mask, n_groups)      -> (count, sum)
 
 Everything else in the cycle — the dense PK-index gather join, union
@@ -47,6 +49,8 @@ class OperatorBackend:
     scan: Callable        # (cols[C,T], lo[C,Q], hi[C,Q], valid[T]) -> u32[T,W]
     join_block: Callable  # (kl[Tl], ml[Tl,W], kr[Tr], mr[Tr,W], vr[Tr])
                           #   -> (rid int32[Tl], mask u32[Tl,W])
+    join_partitioned: Callable  # (kl[Tl], ml[Tl,W], bkeys[P,B], brows[P,B],
+                                #  bounds[P], mr[Tr,W]) -> (rid, mask)
     groupby: Callable     # (codes[T], vals[T], mask[T,W], G) -> (cnt, sum)
 
 
@@ -114,6 +118,13 @@ def _jnp_join_block(keys_l, mask_l, keys_r, mask_r, valid_r):
     return ref.bitmask_join_ref(keys_l, mask_l, keys_r, mask_r, valid_r)
 
 
+def _jnp_join_partitioned(keys_l, mask_l, bucket_keys, bucket_rows, bounds,
+                          mask_r):
+    from repro.kernels import ref
+    return ref.partitioned_join_ref(keys_l, mask_l, bucket_keys,
+                                    bucket_rows, bounds, mask_r)
+
+
 def _jnp_groupby(group_code, values, mask, n_groups):
     from repro.kernels import ref
     return ref.shared_groupby_ref(group_code, values, mask, n_groups)
@@ -121,4 +132,4 @@ def _jnp_groupby(group_code, values, mask, n_groups):
 
 register_backend(OperatorBackend(
     name="jnp", scan=_jnp_scan, join_block=_jnp_join_block,
-    groupby=_jnp_groupby))
+    join_partitioned=_jnp_join_partitioned, groupby=_jnp_groupby))

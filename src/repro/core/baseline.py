@@ -37,9 +37,17 @@ class QueryAtATimeEngine:
         self.caps = candidate_cap
         self.state = plan.catalog.init_state(initial_data)
         self._fns = {}
+        # preallocated per-template parameter staging (mirrors the shared
+        # engine's packed admission: fill in place, one transfer per
+        # dispatch).  The transfer below uses jnp.array (copy=True): a
+        # plain asarray can be ZERO-copy on the CPU backend, and an
+        # in-flight dispatch must not see a later dispatch's overwrite.
+        self._param_bufs = {}
         for name, tpl in plan.templates.items():
             fn = self._build(tpl)
             self._fns[name] = jax.jit(fn) if jit else fn
+            self._param_bufs[name] = np.zeros((max(len(tpl.preds), 1), 2),
+                                              np.int32)
         self.queries_done = 0
 
     def _cap_for(self, tpl: QueryTemplate) -> int:
@@ -138,12 +146,11 @@ class QueryAtATimeEngine:
         still computes (the same dispatch/collect protocol as
         SharedDBEngine, so engine comparisons measure like with like)."""
         tpl = self.plan.templates[template]
-        n_preds = max(len(tpl.preds), 1)
-        arr = np.zeros((n_preds, 2), np.int32)
+        arr = self._param_bufs[template]
         for pi in range(len(tpl.preds)):
             arr[pi] = params[pi]
         t = Ticket(0, template, params, time.time())
-        t.result = self._fns[template](self.state, jnp.asarray(arr))
+        t.result = self._fns[template](self.state, jnp.array(arr))
         return t
 
     def collect(self, t: Ticket) -> Ticket:

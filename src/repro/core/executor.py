@@ -63,16 +63,17 @@ class _StagingBuffers:
     activation/mask fields are cleared between uses (parameter/payload
     slots are masked out by ``active``/``*_mask`` and may hold stale
     values).
+
+    Query admission is PACKED: one contiguous [qcap, P_max, 2] parameter
+    buffer plus one [qcap] active vector cover every template (each
+    template owns the rows of its static slot range), so staging a
+    heartbeat is a single host->device copy per buffer instead of
+    O(templates) transfers.
     """
 
     def __init__(self, plan: CompiledPlan, slots: UpdateSlots):
-        self.params: Dict[str, np.ndarray] = {}
-        self.active: Dict[str, np.ndarray] = {}
-        for name, tpl in plan.templates.items():
-            cap = plan.caps[name]
-            n_preds = max(len(tpl.preds), 1)
-            self.params[name] = np.zeros((cap, n_preds, 2), np.int32)
-            self.active[name] = np.zeros((cap,), bool)
+        self.params = np.zeros((plan.qcap, plan.n_params_max, 2), np.int32)
+        self.active = np.zeros((plan.qcap,), bool)
         # same layout as the device batches, numpy-backed (ONE source of
         # truth: storage.empty_update_batch)
         self.updates: Dict[str, Dict[str, Any]] = {
@@ -80,11 +81,22 @@ class _StagingBuffers:
             for t, schema in plan.catalog.schemas.items()}
 
     def reset(self) -> None:
-        for a in self.active.values():
-            a[:] = False
+        self.active[:] = False
         for b in self.updates.values():
             for field, fill in UPDATE_BATCH_RESET.items():
                 b[field][:] = fill
+
+
+@dataclasses.dataclass
+class CycleResult:
+    """One collected heartbeat: routed tickets + its observed wall time.
+
+    ``wall_s`` is the collector-side inter-completion time (elapsed from
+    the previous collect's return — or the drain start — to this one),
+    which under pipelining is the achieved cycle time the paper's
+    2 x cycle-time latency bound is stated against (§3.5)."""
+    tickets: Dict[str, List[Ticket]]
+    wall_s: float
 
 
 @dataclasses.dataclass
@@ -145,24 +157,31 @@ class SharedDBEngine:
 
     # ------------------------------------------------------------ one beat
     def _admit_queries(self, buf: _StagingBuffers):
-        batch, admitted = {}, {}
+        """Drain the queues into the packed staging buffers.
+
+        Fills each admitted query's static slot range in the shared
+        [qcap, P_max, 2] / [qcap] buffers, then stages BOTH with one
+        ``jnp.asarray`` each — a single H2D copy per heartbeat instead of
+        one per template."""
+        admitted = {}
+        params, active = buf.params, buf.active
         for name, tpl in self.plan.templates.items():
             cap = self.plan.caps[name]
-            params = buf.params[name]
-            active = buf.active[name]
+            off = self.plan.offsets[name]
             take: List[Ticket] = []
             q = self._queues[name]
             while q and len(take) < cap:
                 take.append(q.popleft())
             for slot, ticket in enumerate(take):
-                active[slot] = True
+                g = off + slot
+                active[g] = True
                 for pi in range(len(tpl.preds)):
                     lo, hi = ticket.params[pi]
-                    params[slot, pi, 0] = lo
-                    params[slot, pi, 1] = hi
-            batch[name] = {"params": jnp.asarray(params),
-                           "active": jnp.asarray(active)}
+                    params[g, pi, 0] = lo
+                    params[g, pi, 1] = hi
             admitted[name] = take
+        batch = {"params": jnp.asarray(params),
+                 "active": jnp.asarray(active)}
         return batch, admitted
 
     def _admit_updates(self, buf: _StagingBuffers):
@@ -266,23 +285,36 @@ class SharedDBEngine:
         return out
 
     def run_until_drained(self, max_cycles: int = 1000,
-                          pipelined: bool = False):
+                          pipelined: bool = False) -> List[CycleResult]:
         """Cycle until the queues are empty.
+
+        ``max_cycles`` bounds cycles COLLECTED (each return entry is one
+        completed heartbeat), not dispatches — dispatching is likewise
+        capped by the budget so no admitted work is left un-collected
+        when the bound trips.  Returns one ``CycleResult`` (routed
+        tickets + observed wall time) per collected cycle, for latency
+        accounting.
 
         pipelined=True keeps up to ``pipeline_depth`` heartbeats in
         flight, overlapping admission/staging for cycle N+1 with device
         execution of cycle N.
         """
         depth = self.pipeline_depth if pipelined else 1
-        done = []
+        done: List[CycleResult] = []
         dispatched = 0
-        while ((self.pending() and dispatched < max_cycles)
-               or self._inflight):
+        t_prev = time.time()
+        while len(done) < max_cycles and (self.pending() or self._inflight
+                                          or self._spilled):
             while (self.pending() and dispatched < max_cycles
                    and len(self._inflight) < depth):
                 self.dispatch()
                 dispatched += 1
-            done.append(self.collect())
+            if not self._inflight and not self._spilled:
+                break       # budget exhausted with work still queued
+            routed = self.collect()
+            now = time.time()
+            done.append(CycleResult(tickets=routed, wall_s=now - t_prev))
+            t_prev = now
         return done
 
     # --------------------------------------------------- host-side fetch

@@ -15,15 +15,28 @@ The lowered graph is inspectable (``LoweredPlan.stages()``), and executing
 it is a mechanical walk that delegates each hot loop to an operator
 backend (backends.py): the jnp reference ops or the Pallas TPU kernels.
 
-Join access paths are chosen at lowering time, per node:
+Join access paths are chosen at lowering time, per node, from table
+capacities:
 
-  * ``gather`` — the PK table maintains a dense key->row index
+  * ``gather``      — the PK table maintains a dense key->row index
     (storage.py), so the shared PK-FK join is an O(1) gather per spine
     row.  This is the TPU-native replacement for the paper's hash join
     and needs no kernel; both backends share it.
-  * ``block``  — no dense index (schema.key_space == 0): the shared join
-    runs as a blocked key-equality kernel fused with query-set
-    intersection (kernels/bitmask_join.py on the Pallas backend).
+  * ``partitioned`` — no dense index but a large table: the PK side is
+    range-partitioned into fixed-capacity buckets once per heartbeat at
+    update-apply time (storage.build_key_partitions) and each spine row
+    probes exactly one bucket — O(Tl*Tr/P) instead of O(Tl*Tr)
+    (kernels/partitioned_join.py on the Pallas backend).
+  * ``block``       — no dense index and a small table
+    (< PARTITIONED_MIN_CAPACITY rows): the dense blocked key-equality
+    kernel fused with query-set intersection (kernels/bitmask_join.py);
+    partitioning overhead is not worth it at this size.
+
+Scan predicate binding is likewise precomputed: each ScanStage carries
+static gather index arrays (``covered``, ``param_idx``) built ONCE here,
+so the traced cycle binds a stage's whole lo/hi predicate matrix from the
+packed admission buffers with one vectorized op — no per-template python
+scatter loops on the hot path, regardless of template count.
 
 Per-cycle work remains a static function of table/slot capacities — the
 bounded-computation property (§3.5) — because every shape below is fixed
@@ -45,8 +58,20 @@ from repro.core.plan import CompiledPlan, GroupAgg
 INT_MIN = ops.INT_MIN
 INT_MAX = ops.INT_MAX
 
+# join access-path thresholds: an index-less PK table below the minimum
+# capacity runs the dense block kernel; at or above it, the bucketed
+# partitioned probe (bucket capacity targets one lane-friendly tile)
+PARTITIONED_MIN_CAPACITY = 512
+PARTITION_BUCKET_CAP = 256
+
 # (template, q_offset_in_window, slot_capacity)
 SlotRange = Tuple[str, int, int]
+
+
+def partition_layout(capacity: int) -> Tuple[int, int]:
+    """(n_partitions, bucket_cap) for a PK table of this capacity."""
+    bucket_cap = min(PARTITION_BUCKET_CAP, capacity)
+    return -(-capacity // bucket_cap), bucket_cap
 
 
 # ---------------------------------------------------------------------------
@@ -56,14 +81,23 @@ SlotRange = Tuple[str, int, int]
 
 @dataclasses.dataclass(frozen=True)
 class ScanStage:
-    """One ClockScan pass over a base table for ALL referencing queries."""
+    """One ClockScan pass over a base table for ALL referencing queries.
+
+    The predicate scatter plan is precomputed at lowering time: given the
+    packed admission buffers (params int32[qcap, P_max, 2], active
+    bool[qcap]), the stage's whole lo/hi predicate matrix binds with one
+    vectorized gather — ``covered`` marks window slots belonging to a
+    referencing template, ``param_idx`` maps (predicated column, window
+    slot) to the packed parameter row (-1 = unbound -> pass-all when
+    active).
+    """
     table: str
     cols: Tuple[str, ...]
     wlo: int                                  # word window [wlo, whi)
     whi: int
     slots: Tuple[SlotRange, ...]              # referencing templates
-    # (template, col_idx, param_idx, q_offset_in_window, cap)
-    bindings: Tuple[Tuple[str, int, int, int, int], ...]
+    covered: np.ndarray                       # bool[q_window]
+    param_idx: np.ndarray                     # int32[max(C,1), q_window]
 
     @property
     def q_window(self) -> int:
@@ -76,9 +110,11 @@ class JoinStage:
     spine: str
     fk_col: str
     pk_table: str
-    kind: str                                 # "gather" | "block"
+    kind: str                                 # "gather"|"partitioned"|"block"
     pk_col: str                               # key column on the PK side
     sub_mask: np.ndarray                      # uint32[W] subscriber words
+    n_partitions: int = 0                     # partitioned kind only
+    bucket_cap: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +157,7 @@ class LoweredPlan:
     plan: CompiledPlan
     qcap: int
     W: int
+    n_params_max: int                         # packed params depth P_max
     scans: Tuple[ScanStage, ...]
     joins: Tuple[JoinStage, ...]
     sorts: Tuple[SortStage, ...]
@@ -160,14 +197,21 @@ def lower_plan(plan: CompiledPlan) -> LoweredPlan:
     for table, node in plan.scans.items():
         wlo, whi = plan.word_range(node.referencing)
         base = wlo * 32
-        bindings = tuple(
-            (name, col_idx, param_idx, plan.offsets[name] - base,
-             plan.caps[name])
-            for name, col_idx, param_idx in node.bindings)
+        q_sub = (whi - wlo) * 32
+        # lowering-time predicate scatter plan: static gather indices into
+        # the packed admission buffers (no python loops in the cycle)
+        covered = np.zeros(q_sub, bool)
+        for name in node.referencing:
+            o = plan.offsets[name] - base
+            covered[o:o + plan.caps[name]] = True
+        param_idx = np.full((max(len(node.cols), 1), q_sub), -1, np.int32)
+        for name, col_idx, pidx in node.bindings:
+            o = plan.offsets[name] - base
+            param_idx[col_idx, o:o + plan.caps[name]] = pidx
         scans.append(ScanStage(
             table=table, cols=tuple(node.cols), wlo=wlo, whi=whi,
             slots=_slot_ranges(plan, node.referencing, base),
-            bindings=bindings))
+            covered=covered, param_idx=param_idx))
 
     joins = []
     for j in plan.joins:
@@ -175,11 +219,19 @@ def lower_plan(plan: CompiledPlan) -> LoweredPlan:
         if schema.pk is None:
             raise ValueError(
                 f"join {j.spine}->{j.pk_table}: PK table has no key column")
-        kind = "gather" if schema.key_space > 0 else "block"
+        n_parts, bucket_cap = 0, 0
+        if schema.key_space > 0:
+            kind = "gather"
+        elif schema.capacity >= PARTITIONED_MIN_CAPACITY:
+            kind = "partitioned"
+            n_parts, bucket_cap = partition_layout(schema.capacity)
+        else:
+            kind = "block"
         joins.append(JoinStage(
             spine=j.spine, fk_col=j.fk_col, pk_table=j.pk_table,
             kind=kind, pk_col=schema.pk,
-            sub_mask=plan.sub_mask(j.subscribers)))
+            sub_mask=plan.sub_mask(j.subscribers),
+            n_partitions=n_parts, bucket_cap=bucket_cap))
 
     sorts = []
     for s in plan.sorts:
@@ -221,7 +273,7 @@ def lower_plan(plan: CompiledPlan) -> LoweredPlan:
         limits[o:o + c] = min(t.limit, plan.max_results)
 
     return LoweredPlan(
-        plan=plan, qcap=plan.qcap, W=W,
+        plan=plan, qcap=plan.qcap, W=W, n_params_max=plan.n_params_max,
         scans=tuple(scans), joins=tuple(joins), sorts=tuple(sorts),
         groups=tuple(groups), routes=tuple(routes), limits=limits)
 
@@ -234,13 +286,16 @@ def lower_plan(plan: CompiledPlan) -> LoweredPlan:
 def build_cycle(lowered: LoweredPlan, backend: OperatorBackend):
     """Returns cycle(storage, queries, updates) -> (storage', results).
 
-    queries: {template: {"params": int32[cap, n_preds, 2],
-                          "active": bool[cap]}}
+    queries: the packed admission batch —
+             {"params": int32[qcap, P_max, 2], "active": bool[qcap]}
+             (ONE host->device transfer per buffer per heartbeat; each
+             template's slot range is a static view into it)
     updates: {table: update batch dict (see storage.empty_update_batch)}
     results: per template row-id matrices / group top-k; all fixed shapes,
     plus "_overflow" (union-cap overflow count) and "_join_rids".
     """
-    from repro.core.storage import apply_updates
+    from repro.core import dataquery as dq
+    from repro.core.storage import apply_updates, build_key_partitions
 
     plan = lowered.plan
     cat = plan.catalog
@@ -249,42 +304,61 @@ def build_cycle(lowered: LoweredPlan, backend: OperatorBackend):
     join_subs = [jnp.asarray(j.sub_mask) for j in lowered.joins]
     sort_subs = [jnp.asarray(s.sub_mask) for s in lowered.sorts]
     route_subs = [jnp.asarray(r.sub_mask) for r in lowered.routes]
+    # lowering-time predicate scatter plans as device constants
+    scan_covered = [jnp.asarray(s.covered) for s in lowered.scans]
+    scan_pidx = [jnp.asarray(s.param_idx) for s in lowered.scans]
+    # PK tables probed by partitioned joins: partition once per heartbeat,
+    # shared by every join into the same table
+    part_specs = {}
+    for j in lowered.joins:
+        if j.kind == "partitioned":
+            part_specs.setdefault(
+                j.pk_table, (j.pk_col, j.n_partitions, j.bucket_cap))
 
     def cycle(storage, queries, updates):
-        # 1. apply updates in arrival order (cycle-consistent snapshot)
+        # 1. apply updates in arrival order (cycle-consistent snapshot),
+        #    then rebuild the partitioned joins' bucket structures from
+        #    the fresh snapshot (update-apply time, paper §4.4 access
+        #    paths)
         storage = dict(storage)
         for table, batch in updates.items():
             storage[table] = apply_updates(cat.schemas[table],
                                            storage[table], batch)
+        partitions = {
+            table: build_key_partitions(storage[table][pk_col],
+                                        storage[table]["_valid"],
+                                        n_parts, bucket_cap)
+            for table, (pk_col, n_parts, bucket_cap) in part_specs.items()}
 
         # 2. shared scans (ClockScan): one pass per table for ALL queries,
-        #    each touching only its subscribers' word window.
+        #    each touching only its subscribers' word window.  The whole
+        #    lo/hi predicate matrix binds from the packed admission
+        #    buffers in one vectorized gather (scatter plan precomputed
+        #    at lowering time).
         scan_masks = {}
-        for st in lowered.scans:
+        for st, covered, pidx in zip(lowered.scans, scan_covered,
+                                     scan_pidx):
             tbl = storage[st.table]
-            C = max(len(st.cols), 1)
-            T = cat.schemas[st.table].capacity
-            q_sub = st.q_window
-            lo = jnp.full((C, q_sub), INT_MAX, jnp.int32)  # default: fail
-            hi = jnp.full((C, q_sub), INT_MIN, jnp.int32)
-            # referencing templates: default pass-all on their active slots
-            for name, o, c in st.slots:
-                act = queries[name]["active"]
-                lo = lo.at[:, o:o + c].set(
-                    jnp.where(act[None, :], INT_MIN, INT_MAX))
-                hi = hi.at[:, o:o + c].set(
-                    jnp.where(act[None, :], INT_MAX, INT_MIN))
-            # bound predicated columns from query params
-            for name, col_idx, param_idx, o, c in st.bindings:
-                act = queries[name]["active"]
-                p = queries[name]["params"][:, param_idx]     # [cap, 2]
-                lo = lo.at[col_idx, o:o + c].set(
-                    jnp.where(act, p[:, 0], INT_MAX))
-                hi = hi.at[col_idx, o:o + c].set(
-                    jnp.where(act, p[:, 1], INT_MIN))
-            cols = (jnp.stack([tbl[c] for c in st.cols])
-                    if st.cols else jnp.zeros((1, T), jnp.int32))
-            m = backend.scan(cols, lo, hi, tbl["_valid"])
+            base = st.wlo * 32
+            act = queries["active"][base:base + st.q_window]
+            qok = act & covered                      # admitted subscribers
+            if not st.cols:
+                # no predicated columns: the scan degenerates to
+                # valid-row x active-subscriber — skip the compare kernel
+                m = dq.pack(tbl["_valid"][:, None] & qok[None, :])
+            else:
+                p = queries["params"][base:base + st.q_window]
+                bound = pidx >= 0
+                safe = jnp.maximum(pidx, 0)
+                qs = jnp.arange(st.q_window)
+                p_lo = p[qs[None, :], safe, 0]       # [C, q_window]
+                p_hi = p[qs[None, :], safe, 1]
+                lo = jnp.where(qok[None, :],
+                               jnp.where(bound, p_lo, INT_MIN), INT_MAX)
+                hi = jnp.where(qok[None, :],
+                               jnp.where(bound, p_hi, INT_MAX), INT_MIN)
+                cols = jnp.stack([tbl[c] for c in st.cols])
+                m = backend.scan(cols, lo, hi, tbl["_valid"])
             scan_masks[st.table] = jnp.pad(m, ((0, 0),
                                                (st.wlo, W - st.whi)))
 
@@ -301,7 +375,12 @@ def build_cycle(lowered: LoweredPlan, backend: OperatorBackend):
                     tbl[st.fk_col], m,
                     storage[st.pk_table]["_pk_index"],
                     scan_masks[st.pk_table])
-            else:  # block: key-equality kernel, no dense index
+            elif st.kind == "partitioned":
+                bkeys, brows, bounds = partitions[st.pk_table]
+                rid, combined = backend.join_partitioned(
+                    tbl[st.fk_col], m, bkeys, brows, bounds,
+                    scan_masks[st.pk_table])
+            else:  # block: dense key-equality kernel, small index-less PK
                 pk_tbl = storage[st.pk_table]
                 rid, combined = backend.join_block(
                     tbl[st.fk_col], m, pk_tbl[st.pk_col],

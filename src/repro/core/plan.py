@@ -130,6 +130,14 @@ class CompiledPlan:
     union_cap: int = 8192
     group_union_cap: int = 16384
 
+    @property
+    def n_params_max(self) -> int:
+        """Packed admission depth: max predicate count over templates.
+
+        The executor stages ONE [qcap, n_params_max, 2] parameter buffer
+        per heartbeat; each template's slots use rows [0, len(preds))."""
+        return max([len(t.preds) for t in self.templates.values()] + [1])
+
     def sub_mask(self, names: List[str]) -> np.ndarray:
         """uint32[W] subscriber word-mask for a set of templates."""
         bits = np.zeros(self.qcap, bool)
@@ -236,8 +244,8 @@ def build_cycle_fn(plan: CompiledPlan, update_slots, kernels: str = "auto"):
       kernels="auto"   -> REPRO_KERNELS override if set, else Pallas on
                           TPU and jnp elsewhere
 
-    queries: {template: {"params": int32[cap, n_preds, 2],
-                          "active": bool[cap]}}
+    queries: the packed admission batch —
+             {"params": int32[qcap, n_params_max, 2], "active": bool[qcap]}
     updates: {table: update batch dict (see storage.empty_update_batch)}
     results: per template row-id matrices / group top-k; all fixed shapes.
     """

@@ -113,6 +113,48 @@ def empty_update_batch(schema: TableSchema, slots: UpdateSlots,
     }
 
 
+INT_SENTINEL = jnp.int32(2147483647)   # reserved: never a live key
+
+
+def build_key_partitions(keys, valid, n_partitions: int, bucket_cap: int):
+    """Range-partition a key column into fixed-capacity buckets.
+
+    The partitioned shared join's access-path structure, rebuilt once per
+    heartbeat right after updates commit (derived state, like ``_pk_index``
+    but reconstructed rather than scatter-maintained).  Valid rows are
+    sorted by key and split into ``n_partitions`` contiguous buckets of
+    exactly ``bucket_cap`` entries, so — unlike a hashed radix partition —
+    NO bucket can overflow: every valid row lands in exactly one bucket
+    and the join stays exact for any key distribution.  Invalid rows and
+    padding sort to the tail under the ``INT_MAX`` sentinel (key domains
+    must exclude ``INT_MAX``, the same reservation the scan predicate
+    bounds already make).
+
+    Returns (bucket_keys int32[P, B], bucket_rows int32[P, B] (-1 = pad),
+    bounds int32[P] — each bucket's smallest key, for the probe side's
+    ``searchsorted``).  Requires n_partitions * bucket_cap >= len(keys).
+
+    Probe contract (see kernels/ref.partitioned_join_ref): a key k lives
+    in the LAST bucket whose bound <= k.  Duplicate keys sort adjacently
+    (row id breaks ties ascending), so the last bucket containing k holds
+    the highest-row duplicate — matching the dense block join's
+    max-row-id resolution.
+    """
+    T = keys.shape[0]
+    cap = n_partitions * bucket_cap
+    assert cap >= T, f"partition capacity {cap} < table capacity {T}"
+    invalid = ~valid
+    order = jnp.lexsort((jnp.arange(T, dtype=jnp.int32), keys,
+                         invalid.astype(jnp.int32)))
+    skeys = jnp.where(invalid[order], INT_SENTINEL, keys[order])
+    srows = jnp.where(invalid[order], -1, order.astype(jnp.int32))
+    skeys = jnp.pad(skeys, (0, cap - T), constant_values=INT_SENTINEL)
+    srows = jnp.pad(srows, (0, cap - T), constant_values=-1)
+    bucket_keys = skeys.reshape(n_partitions, bucket_cap)
+    bucket_rows = srows.reshape(n_partitions, bucket_cap)
+    return bucket_keys, bucket_rows, bucket_keys[:, 0]
+
+
 def locate_rows_by_key(keys_col, probe, valid):
     """Row holding key ``probe[i]`` among valid rows (-1 = absent).
 

@@ -31,6 +31,13 @@ def _pallas_join_block(keys_l, mask_l, keys_r, mask_r, valid_r):
                                interpret=_interpret())
 
 
+def _pallas_join_partitioned(keys_l, mask_l, bucket_keys, bucket_rows,
+                             bounds, mask_r):
+    from repro.kernels.partitioned_join import partitioned_join_pallas
+    return partitioned_join_pallas(keys_l, mask_l, bucket_keys, bucket_rows,
+                                   bounds, mask_r, interpret=_interpret())
+
+
 def _pallas_groupby(group_code, values, mask, n_groups: int):
     from repro.kernels.shared_groupby import shared_groupby_pallas
     return shared_groupby_pallas(group_code, values, mask, n_groups,
@@ -39,4 +46,4 @@ def _pallas_groupby(group_code, values, mask, n_groups: int):
 
 _backends.register_backend(_backends.OperatorBackend(
     name="pallas", scan=_pallas_scan, join_block=_pallas_join_block,
-    groupby=_pallas_groupby))
+    join_partitioned=_pallas_join_partitioned, groupby=_pallas_groupby))

@@ -1,0 +1,90 @@
+"""Partitioned shared join kernel: probe fixed-capacity range buckets
+instead of the whole right side (the O(Tl*Tr) -> O(Tl*Tr/P) upgrade of
+kernels/bitmask_join.py for index-less PK tables).
+
+The right side is pre-partitioned once per heartbeat at update-apply time
+(storage.build_key_partitions): valid rows sorted by key, split into P
+contiguous buckets of exactly B = bucket_cap entries — a range radix on
+the sorted key order, so no bucket can overflow and the join stays exact
+for any key distribution.  The probe has two parts:
+
+  1. bucket routing + gather (XLA): each left key finds its ONE candidate
+     bucket via searchsorted over the P bucket bounds, and that bucket's
+     keys/rows are gathered to [Tl, B] candidate panes — TPU-native
+     dynamic slicing, shared verbatim with the jnp reference path.
+  2. the match reduction (THIS kernel): grid over (left-tile, bucket
+     chunk); each program compares a left tile against one chunk of its
+     rows' candidate panes and accumulates the matched right row id by
+     max — identical accumulation to bitmask_join's right-tile loop, but
+     over B candidates per row instead of Tr.
+
+The bitmask intersection (mask_l & mask_r[rid] — the paper's amended
+``R.query_id = S.query_id`` join predicate) is a single O(Tl) gather once
+rid is known, shared by both backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_L = 256
+TILE_B = 256
+
+
+def _kernel(keys_l_ref, cand_keys_ref, cand_rows_ref, rid_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        rid_ref[...] = jnp.full_like(rid_ref, -1)
+
+    keys_l = keys_l_ref[...]                          # [Tl]
+    hit = (cand_keys_ref[...] == keys_l[:, None]) \
+        & (cand_rows_ref[...] >= 0)
+    cand = jnp.max(jnp.where(hit, cand_rows_ref[...], -1), axis=1)
+    rid_ref[...] = jnp.maximum(rid_ref[...], cand)
+
+
+def partitioned_join_pallas(keys_l, mask_l, bucket_keys, bucket_rows,
+                            bounds, mask_r, *, interpret: bool = True):
+    """Same contract as kernels/ref.partitioned_join_ref."""
+    P, B = bucket_keys.shape
+    Tl_orig = keys_l.shape[0]
+    b = jnp.searchsorted(bounds, keys_l, side="right").astype(jnp.int32) - 1
+    b = jnp.clip(b, 0, P - 1)
+    cand_keys = bucket_keys[b]                        # [Tl, B]
+    cand_rows = bucket_rows[b]
+    # pad to tile multiples: padded candidates carry row -1 (never a hit),
+    # padded left rows are sliced off — mirrors bitmask_join's padding
+    tl = min(TILE_L, max(Tl_orig, 1))
+    tb = min(TILE_B, max(B, 1))
+    pad_l = (-Tl_orig) % tl
+    pad_b = (-B) % tb
+    if pad_l:
+        keys_l = jnp.pad(keys_l, (0, pad_l))
+        cand_keys = jnp.pad(cand_keys, ((0, pad_l), (0, 0)))
+        cand_rows = jnp.pad(cand_rows, ((0, pad_l), (0, 0)),
+                            constant_values=-1)
+    if pad_b:
+        cand_keys = jnp.pad(cand_keys, ((0, 0), (0, pad_b)))
+        cand_rows = jnp.pad(cand_rows, ((0, 0), (0, pad_b)),
+                            constant_values=-1)
+    Tl, Bp = Tl_orig + pad_l, B + pad_b
+    rid = pl.pallas_call(
+        _kernel,
+        grid=(Tl // tl, Bp // tb),
+        in_specs=[
+            pl.BlockSpec((tl,), lambda i, j: (i,)),
+            pl.BlockSpec((tl, tb), lambda i, j: (i, j)),
+            pl.BlockSpec((tl, tb), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tl,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Tl,), jnp.int32),
+        interpret=interpret,
+    )(keys_l, cand_keys, cand_rows)
+    rid = rid[:Tl_orig]
+    safe = jnp.clip(rid, 0, mask_r.shape[0] - 1)
+    combined = jnp.where((rid >= 0)[:, None], mask_l & mask_r[safe],
+                         jnp.uint32(0))
+    return rid, combined

@@ -32,6 +32,34 @@ def bitmask_join_ref(keys_l, mask_l, keys_r, mask_r, valid_r):
     return rid, jnp.where((rid >= 0)[:, None], combined, jnp.uint32(0))
 
 
+def partitioned_join_ref(keys_l, mask_l, bucket_keys, bucket_rows, bounds,
+                         mask_r):
+    """Partitioned shared join probe, pure jnp (oracle + CPU path).
+
+    The right side arrives pre-partitioned (storage.build_key_partitions):
+    bucket_keys/bucket_rows int32[P, B] hold the valid right rows sorted
+    by key and split into P fixed-capacity range buckets; bounds int32[P]
+    is each bucket's smallest key.  Each left key probes exactly ONE
+    bucket — the last whose bound <= key — so the probe is O(Tl * B) =
+    O(Tl * Tr / P) instead of the dense block join's O(Tl * Tr).
+
+    Returns (rid int32[Tl] (-1 = no match; duplicates resolve to the max
+    row id, matching bitmask_join_ref), combined uint32[Tl, W] =
+    mask_l & mask_r[rid]).
+    """
+    P, B = bucket_keys.shape
+    b = jnp.searchsorted(bounds, keys_l, side="right").astype(jnp.int32) - 1
+    b = jnp.clip(b, 0, P - 1)
+    cand_keys = bucket_keys[b]                       # [Tl, B]
+    cand_rows = bucket_rows[b]
+    hit = (cand_keys == keys_l[:, None]) & (cand_rows >= 0)
+    rid = jnp.max(jnp.where(hit, cand_rows, -1), axis=1)
+    safe = jnp.clip(rid, 0, mask_r.shape[0] - 1)
+    combined = jnp.where((rid >= 0)[:, None], mask_l & mask_r[safe],
+                         jnp.uint32(0))
+    return rid, combined
+
+
 def shared_groupby_ref(group_code, values, mask, n_groups: int):
     """-> (count f32[G, Q], sum f32[G, Q]).
 

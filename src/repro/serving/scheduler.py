@@ -95,6 +95,9 @@ class CycleServer:
         self._pending_logits = None
         self.cycles = 0
         self.completed: List[Request] = []
+        # per-cycle wall times of the last run_until_drained (latency
+        # accounting parity with the relational engine's CycleResult)
+        self.last_drain_walls: List[float] = []
 
     def _ctx_len(self) -> int:
         if self.cfg.enc_dec:
@@ -201,8 +204,16 @@ class CycleServer:
         return self.collect()
 
     def run_until_drained(self, max_cycles: int = 10000) -> List[Request]:
+        """Heartbeat until idle; ``max_cycles`` bounds cycles run.
+
+        Per-cycle wall times land in ``self.last_drain_walls`` — the same
+        latency accounting the relational engine's run_until_drained
+        returns via CycleResult (protocol parity for benchmarks)."""
         out = []
-        while (self.pending() or self.active()) and max_cycles:
+        self.last_drain_walls = []
+        while (self.pending() or self.active()) \
+                and len(self.last_drain_walls) < max_cycles:
+            t0 = time.time()
             out.extend(self.run_cycle())
-            max_cycles -= 1
+            self.last_drain_walls.append(time.time() - t0)
         return out

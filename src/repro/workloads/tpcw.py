@@ -30,11 +30,22 @@ N_LNAMES = 500
 
 def make_catalog(scale_items: int = 10000,
                  scale_customers: int = 28800,
-                 headroom: float = 0.5) -> Catalog:
+                 headroom: float = 0.5,
+                 dense_pk_index: bool = True) -> Catalog:
     """headroom: growth slack as a fraction of the initial cardinality.
     Table CAPACITY (not live rows) bounds per-cycle work — SharedDB's
-    bounded-computation guarantee is a function of these capacities."""
+    bounded-computation guarantee is a function of these capacities.
+
+    dense_pk_index=False drops every table's dense key->row index
+    (key_space=0: unique keys over an unbounded domain), forcing shared
+    joins onto the index-less access paths — ``partitioned`` for large PK
+    tables, ``block`` for small ones (core/lowering.py).  This is the
+    configuration the partitioned-join benchmarks and parity tests run."""
     h = headroom
+
+    def ks(n: int) -> int:
+        return n if dense_pk_index else 0
+
     items_cap = scale_items + 2048
     cust_cap = scale_customers + max(2048, int(scale_customers * h))
     orders0 = int(scale_customers * 0.9)
@@ -42,33 +53,33 @@ def make_catalog(scale_items: int = 10000,
     ol_cap = orders0 * 3 + max(8192, int(orders0 * 3 * h))
     return Catalog([
         TableSchema("country", ("co_id", "co_name"), 128,
-                    pk="co_id", key_space=128),
+                    pk="co_id", key_space=ks(128)),
         TableSchema("address", ("addr_id", "addr_co_id", "addr_street"),
                     cust_cap + 8192, pk="addr_id",
-                    key_space=cust_cap + 8192),
+                    key_space=ks(cust_cap + 8192)),
         TableSchema("customer",
                     ("c_id", "c_uname", "c_passwd", "c_addr_id",
                      "c_discount", "c_since", "c_expiration"),
-                    cust_cap, pk="c_id", key_space=cust_cap),
+                    cust_cap, pk="c_id", key_space=ks(cust_cap)),
         TableSchema("author", ("a_id", "a_fname", "a_lname"),
-                    max(scale_items // 4 + 1024, 2048),
-                    pk="a_id", key_space=max(scale_items // 4 + 1024, 2048)),
+                    max(scale_items // 4 + 1024, 2048), pk="a_id",
+                    key_space=ks(max(scale_items // 4 + 1024, 2048))),
         TableSchema("item",
                     ("i_id", "i_a_id", "i_subject", "i_title", "i_pub_date",
                      "i_cost", "i_srp", "i_stock", "i_related1"),
-                    items_cap, pk="i_id", key_space=items_cap),
+                    items_cap, pk="i_id", key_space=ks(items_cap)),
         TableSchema("orders",
                     ("o_id", "o_c_id", "o_date", "o_total", "o_status"),
-                    orders_cap, pk="o_id", key_space=orders_cap),
+                    orders_cap, pk="o_id", key_space=ks(orders_cap)),
         TableSchema("order_line",
                     ("ol_o_id", "ol_i_id", "ol_qty", "ol_discount"),
                     ol_cap),
         TableSchema("cc_xacts", ("cx_o_id", "cx_type", "cx_amount"),
-                    orders_cap, pk="cx_o_id", key_space=orders_cap),
+                    orders_cap, pk="cx_o_id", key_space=ks(orders_cap)),
         TableSchema("shopping_cart_line",
                     ("scl_id", "scl_sc_id", "scl_i_id", "scl_qty"),
                     max(8192, cust_cap), pk="scl_id",
-                    key_space=max(8192, cust_cap)),
+                    key_space=ks(max(8192, cust_cap))),
     ])
 
 
@@ -189,8 +200,10 @@ def make_templates(items_cap: int) -> Tuple[List[QueryTemplate],
 
 
 def build_tpcw_plan(scale_items: int = 10000, scale_customers: int = 28800,
-                    max_results: int = 64, headroom: float = 0.5):
-    catalog = make_catalog(scale_items, scale_customers, headroom)
+                    max_results: int = 64, headroom: float = 0.5,
+                    dense_pk_index: bool = True):
+    catalog = make_catalog(scale_items, scale_customers, headroom,
+                           dense_pk_index=dense_pk_index)
     items_cap = catalog.schemas["item"].capacity
     templates, caps = make_templates(items_cap)
     return compile_plan(catalog, templates, caps, max_results=max_results)

@@ -142,15 +142,40 @@ def test_snapshot_isolation_and_arrival_order_pipelined(world):
 
 def test_staging_buffers_are_reused_not_reallocated(world):
     plan, shared, _, gen = world
-    bufs = [id(b.params[name])
-            for b in shared._staging for name in plan.templates]
+    bufs = [id(a) for b in shared._staging for a in (b.params, b.active)]
     shared.submit("get_book", {0: (1, 1)})
     shared.run_cycle()
     shared.submit("get_book", {0: (2, 2)})
     shared.run_cycle()
-    after = [id(b.params[name])
-             for b in shared._staging for name in plan.templates]
+    after = [id(a) for b in shared._staging for a in (b.params, b.active)]
     assert bufs == after
+    # packed admission: ONE contiguous params buffer + ONE active vector
+    # covering every template's slot range
+    for b in shared._staging:
+        assert b.params.shape == (plan.qcap, plan.n_params_max, 2)
+        assert b.active.shape == (plan.qcap,)
+
+
+def test_run_until_drained_bounds_cycles_collected_and_times_them(world):
+    """max_cycles bounds COLLECTED cycles; every entry carries its wall
+    time; no admitted work is stranded in flight when the bound trips."""
+    plan, shared, _, gen = world
+    cap = plan.caps["admin_item"]
+    for i in range(cap * 4):                  # 4 cycles worth of backlog
+        shared.submit("admin_item", {0: (i % 64, i % 64)})
+    before = shared.cycles_run
+    done = shared.run_until_drained(max_cycles=2, pipelined=True)
+    assert len(done) == 2
+    assert shared.cycles_run == before + 2
+    assert not shared.in_flight()             # nothing stranded
+    assert shared.pending() == cap * 2        # the rest stayed queued
+    assert all(d.wall_s >= 0.0 for d in done)
+    routed = sum(len(ts) for d in done for ts in d.tickets.values())
+    assert routed == cap * 2
+    # the remainder drains with per-cycle accounting intact
+    rest = shared.run_until_drained(pipelined=True)
+    assert sum(len(ts) for d in rest for ts in d.tickets.values()) \
+        == cap * 2
 
 
 def test_stale_staging_state_does_not_leak_between_cycles(world):
