@@ -20,7 +20,7 @@ Three measurements, one per critical-path fix:
                         per-cycle CycleResult accounting.
 
 ``python -m benchmarks.critical_path`` prints the dict; benchmarks/run.py
-folds it into BENCH_PR2.json.
+folds it into BENCH_PR3.json.
 """
 from __future__ import annotations
 

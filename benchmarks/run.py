@@ -1,14 +1,18 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness: one entry per paper figure (Figs. 7-11) plus the
-beyond-paper roofline report and the critical-path record.
+beyond-paper roofline report, the critical-path record, and the
+incremental-scan record.
 
-    python -m benchmarks.run [--quick]   # figures + BENCH_PR2.json
-    python -m benchmarks.run --smoke     # critical path only (CI gate)
+    python -m benchmarks.run [--quick]   # figures + BENCH_PR3.json
+    python -m benchmarks.run --smoke     # machine-readable record only
+                                         # (the CI cycle-time SLA gate)
 
-Every invocation (re)writes ``BENCH_PR2.json`` — the machine-readable
+Every invocation (re)writes ``BENCH_PR3.json`` — the machine-readable
 perf trajectory: per-heartbeat cycle time, host dispatch/staging time,
-the partitioned-vs-block join scaling curve, and the pipelined/sync
-cycle-time ratio.
+the partitioned-vs-block join scaling curve, the pipelined/sync
+cycle-time ratio, and the delta-vs-full-rescan scan curve + steady-state
+heartbeat.  ``tests/test_sla_gate.py`` fails the build when this record
+regresses past its stored thresholds.
 """
 from __future__ import annotations
 
@@ -18,7 +22,7 @@ import sys
 import time
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                          os.pardir, "BENCH_PR2.json")
+                          os.pardir, "BENCH_PR3.json")
 
 
 def _emit(name: str, us: float, derived: str):
@@ -26,9 +30,10 @@ def _emit(name: str, us: float, derived: str):
 
 
 def write_bench_json(smoke: bool) -> dict:
-    from benchmarks import critical_path
-    record = {"pr": 2, "mode": "smoke" if smoke else "full",
-              **critical_path.run(smoke=smoke)}
+    from benchmarks import critical_path, delta_scan_bench
+    record = {"pr": 3, "mode": "smoke" if smoke else "full",
+              **critical_path.run(smoke=smoke),
+              "delta_scan": delta_scan_bench.run(smoke=smoke)}
     path = os.path.abspath(BENCH_JSON)
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
@@ -46,6 +51,15 @@ def write_bench_json(smoke: bool) -> dict:
           f"pipelined {record['cycle']['mean_cycle_us_pipelined']:.0f}us "
           f"(ratio {record['cycle']['pipelined_sync_ratio']:.3f})",
           flush=True)
+    ds = record["delta_scan"]
+    big = ds["curve"][-1]
+    print(f"delta scan {big['rows']} rows: {big['delta_us']:.0f}us vs "
+          f"full {big['full_us']:.0f}us ({big['speedup']:.1f}x); "
+          f"steady heartbeat delta "
+          f"{ds['heartbeat']['delta_heartbeat_us']:.0f}us vs full "
+          f"{ds['heartbeat']['full_heartbeat_us']:.0f}us "
+          f"(delta fraction "
+          f"{ds['heartbeat']['delta_cycle_fraction']:.2f})", flush=True)
     return record
 
 

@@ -14,6 +14,7 @@ registry at plan-build time.  Two backends ship:
 Backend surface (the shared-operator hot loops):
 
   scan(cols, lo, hi, valid)                 -> uint32[T, W]   (ClockScan)
+  scan_delta(cols, lo, hi, valid, rows)     -> uint32[D, W]   (dirty rows)
   join_block(kl, ml, kr, mr, valid_r)       -> (rid, mask)    (shared join)
   join_partitioned(kl, ml, bkeys, brows,
                    bounds, mr)              -> (rid, mask)    (bucketed join)
@@ -52,6 +53,8 @@ class OperatorBackend:
     join_partitioned: Callable  # (kl[Tl], ml[Tl,W], bkeys[P,B], brows[P,B],
                                 #  bounds[P], mr[Tr,W]) -> (rid, mask)
     groupby: Callable     # (codes[T], vals[T], mask[T,W], G) -> (cnt, sum)
+    scan_delta: Callable  # (cols[C,T], lo[C,Q], hi[C,Q], valid[T],
+                          #  rows[D] (-1 pad)) -> u32[D,W]  (dirty rescan)
 
 
 _REGISTRY: Dict[str, OperatorBackend] = {}
@@ -84,15 +87,20 @@ def resolve_backend(kernels: str = "auto") -> OperatorBackend:
 
     "jnp" / "ref" -> the reference backend; "pallas" -> the TPU kernels;
     "auto" -> REPRO_KERNELS override if set, else Pallas iff running on a
-    TPU backend.
+    TPU backend.  Any other explicitly REGISTERED backend name resolves
+    too (instrumented/wrapped backends in tests); unknown names raise
+    ValueError.
     """
     if kernels in ("jnp", "ref"):
         return get_backend("jnp")
     if kernels == "pallas":
         return get_backend("pallas")
     if kernels != "auto":
-        raise ValueError(f"kernels must be 'jnp', 'pallas' or 'auto', "
-                         f"got {kernels!r}")
+        _ensure_registered()
+        if kernels in _REGISTRY:
+            return _REGISTRY[kernels]
+        raise ValueError(f"kernels must be 'jnp', 'pallas', 'auto' or a "
+                         f"registered backend name, got {kernels!r}")
     forced = os.environ.get("REPRO_KERNELS")
     if forced and forced != "auto":
         try:
@@ -130,6 +138,12 @@ def _jnp_groupby(group_code, values, mask, n_groups):
     return ref.shared_groupby_ref(group_code, values, mask, n_groups)
 
 
+def _jnp_scan_delta(cols, lo, hi, valid, rows):
+    from repro.kernels import ref
+    return ref.delta_scan_ref(cols, lo, hi, valid, rows)
+
+
 register_backend(OperatorBackend(
     name="jnp", scan=_jnp_scan, join_block=_jnp_join_block,
-    join_partitioned=_jnp_join_partitioned, groupby=_jnp_groupby))
+    join_partitioned=_jnp_join_partitioned, groupby=_jnp_groupby,
+    scan_delta=_jnp_scan_delta))

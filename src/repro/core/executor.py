@@ -23,6 +23,19 @@ processing => worst-case latency = 2 x cycle time (§3.5).
 
 ``run_cycle()`` (dispatch immediately followed by collect) preserves the
 original synchronous semantics for callers that want them.
+
+Scans are incremental: every heartbeat returns the shared scans'
+bitmask words as a carry, and the next dispatch — when the carried
+state exists and the heartbeat's deltas fit their fixed capacities
+(changed admission slots per stage pane, update-touched rows per table
+dirty set) — runs the DELTA cycle, which re-evaluates only those deltas
+against the carried words (lowering.build_delta_cycle).  The choice is
+made host-side from exact admission knowledge, so ineligible heartbeats
+fall back to the full rescan without any data-dependent branching on
+device.  The carry is functional device state produced by one heartbeat
+and consumed by exactly the next, so pipelined in-flight cycles never
+alias it; the host-side ``changed`` staging vector is double-buffered
+with the rest of the admission buffers for the same reason.
 """
 from __future__ import annotations
 
@@ -36,7 +49,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plan import CompiledPlan, build_cycle_fn
+from repro.core.backends import resolve_backend
+from repro.core.lowering import build_cycle, build_delta_cycle, lower_plan
+from repro.core.plan import CompiledPlan
 from repro.core.storage import (UPDATE_BATCH_RESET, UpdateSlots,
                                 empty_update_batch)
 
@@ -74,6 +89,11 @@ class _StagingBuffers:
     def __init__(self, plan: CompiledPlan, slots: UpdateSlots):
         self.params = np.zeros((plan.qcap, plan.n_params_max, 2), np.int32)
         self.active = np.zeros((plan.qcap,), bool)
+        # per-slot staging for the delta path's changed-slot vector: like
+        # params/active it is staged with a zero-copy-capable asarray, so
+        # it must be double-buffered with the rest — an in-flight delta
+        # cycle must never alias a later dispatch's overwrite
+        self.changed = np.zeros((plan.qcap,), bool)
         # same layout as the device batches, numpy-backed (ONE source of
         # truth: storage.empty_update_batch)
         self.updates: Dict[str, Dict[str, Any]] = {
@@ -94,9 +114,18 @@ class CycleResult:
     ``wall_s`` is the collector-side inter-completion time (elapsed from
     the previous collect's return — or the drain start — to this one),
     which under pipelining is the achieved cycle time the paper's
-    2 x cycle-time latency bound is stated against (§3.5)."""
+    2 x cycle-time latency bound is stated against (§3.5).
+
+    ``admitted``/``dirty`` count the queries and update-touched rows the
+    heartbeat carried and ``scan_path`` names the scan flavour it ran
+    ("delta" or "full"; "mixed" when backpressure folded several
+    heartbeats into one collect) — the attribution benchmarks and the
+    SLA gate need to split cycle time between the two paths."""
     tickets: Dict[str, List[Ticket]]
     wall_s: float
+    admitted: int = 0
+    dirty: int = 0
+    scan_path: str = ""
 
 
 @dataclasses.dataclass
@@ -104,6 +133,9 @@ class _InFlight:
     """One dispatched-but-not-collected heartbeat."""
     admitted: Dict[str, List[Ticket]]
     results: Any
+    n_admitted: int = 0
+    n_dirty: int = 0
+    scan_path: str = "full"
 
 
 class SharedDBEngine:
@@ -112,7 +144,7 @@ class SharedDBEngine:
     def __init__(self, plan: CompiledPlan, update_slots: UpdateSlots,
                  initial_data: Dict[str, Dict[str, np.ndarray]],
                  jit: bool = True, kernels: str = "auto",
-                 pipeline_depth: int = 2):
+                 pipeline_depth: int = 2, delta_scans: bool = True):
         self.plan = plan
         self.update_slots = update_slots
         self.state = plan.catalog.init_state(initial_data)
@@ -120,9 +152,24 @@ class SharedDBEngine:
             name: collections.deque() for name in plan.templates}
         self._update_queue: collections.deque = collections.deque()
         self._ticket_ids = itertools.count()
-        cycle = build_cycle_fn(plan, update_slots, kernels=kernels)
-        # donate storage: the snapshot rolls forward functionally in place
+        backend = resolve_backend(kernels)
+        self._lowered = lower_plan(plan)
+        cycle = build_cycle(self._lowered, backend)
+        delta = build_delta_cycle(self._lowered, backend)
+        # donate storage: the snapshot rolls forward functionally in
+        # place; the delta cycle additionally donates the carried scan
+        # words (each carry is produced by one heartbeat and consumed by
+        # exactly the next, so in-flight cycles never alias it)
         self._cycle = jax.jit(cycle, donate_argnums=(0,)) if jit else cycle
+        self._cycle_delta = jax.jit(delta, donate_argnums=(0, 1)) \
+            if jit else delta
+        self.delta_scans = delta_scans
+        self._carry = None           # previous heartbeat's scan words
+        # (active, params) of the last DISPATCHED heartbeat: the delta
+        # path diffs against these to find changed admission slots
+        self._prev_params = np.zeros((plan.qcap, plan.n_params_max, 2),
+                                     np.int32)
+        self._prev_active = np.zeros((plan.qcap,), bool)
         self.pipeline_depth = max(1, pipeline_depth)
         # double-buffered admission: one staging set per pipeline slot
         self._staging = [_StagingBuffers(plan, update_slots)
@@ -133,9 +180,16 @@ class SharedDBEngine:
         # surfaced by the next public collect() so no cycle's routed
         # tickets vanish from the return-value stream
         self._spilled: Dict[str, List[Ticket]] = {}
+        self._spilled_stats: List[_InFlight] = []
         self.cycles_run = 0
         self.queries_done = 0
         self.last_overflow = 0    # union-cap overflow of the last collect
+        self.delta_cycles = 0     # heartbeats dispatched down each path
+        self.full_cycles = 0
+        self.last_scan_path = ""  # path of the last dispatch
+        self.last_delta_overflow = 0   # defensive invariant (always 0)
+        self.last_collect_stats = {"admitted": 0, "dirty": 0,
+                                   "scan_path": ""}
 
     # ------------------------------------------------------------------ API
     def submit(self, template: str, params: Dict[str, Any]) -> Ticket:
@@ -222,7 +276,50 @@ class SharedDBEngine:
                 b["del_mask"][i] = True
                 f["del"] += 1
         self._update_queue = hold
-        return jax.tree.map(jnp.asarray, np_batches)
+        # per-table admitted touch counts: an exact upper bound on the
+        # rows this batch can dirty (delta-path eligibility + accounting)
+        touches = {t: f["ins"] + f["upd"] + f["del"]
+                   for t, f in fill.items()}
+        return jax.tree.map(jnp.asarray, np_batches), touches
+
+    # -------------------------------------------------- incremental scans
+    def _diff_admission(self, buf: _StagingBuffers) -> np.ndarray:
+        """Changed-slot vector vs the previously dispatched heartbeat.
+
+        A slot changed iff its activation flipped, or it stayed active
+        with different parameters — exactly the columns of the carried
+        scan words that the delta cycle's admission pane must refresh.
+        """
+        changed = buf.changed
+        np.not_equal(buf.active, self._prev_active, out=changed)
+        both = buf.active & self._prev_active
+        if both.any():
+            diff = (buf.params != self._prev_params).any(axis=(1, 2))
+            np.logical_or(changed, both & diff, out=changed)
+        return changed
+
+    def _delta_eligible(self, changed: np.ndarray,
+                        touches: Dict[str, int]) -> bool:
+        """Host-side delta-path admission control (conservative).
+
+        True iff every predicated scan's changed slots fit inside its
+        CONTIGUOUS admission pane (span of changed words <= delta_words)
+        and every table's batch fits its dirty set — so the traced delta
+        cycle can assume its fixed delta capacities suffice and never
+        needs a data-dependent fallback branch.
+        """
+        schemas = self.plan.catalog.schemas
+        for table, n in touches.items():
+            if n > schemas[table].dirty_cap:
+                return False
+        for st in self._lowered.scans:
+            if not st.cols:
+                continue
+            sc = changed[st.wlo * 32:st.whi * 32] & st.covered
+            words = np.flatnonzero(sc.reshape(-1, 32).any(axis=1))
+            if words.size and words[-1] - words[0] + 1 > st.delta_words:
+                return False
+        return True
 
     def dispatch(self) -> None:
         """Admit one heartbeat's work and launch the global plan.
@@ -241,28 +338,63 @@ class SharedDBEngine:
         self._staging_idx = (self._staging_idx + 1) % len(self._staging)
         buf.reset()
         queries, admitted = self._admit_queries(buf)
-        updates = self._admit_updates(buf)
-        self.state, results = self._cycle(self.state, queries, updates)
-        self._inflight.append(_InFlight(admitted, results))
+        updates, touches = self._admit_updates(buf)
+        # incremental-scan path choice, made HOST-side so the traced
+        # delta cycle never contains the full-table compare: eligible
+        # when the carried words exist and every delta fits its fixed
+        # capacity, else a safe full rescan (which reseeds the carry)
+        changed = self._diff_admission(buf)
+        use_delta = (self.delta_scans and self._carry is not None
+                     and self._delta_eligible(changed, touches))
+        if use_delta:
+            queries = dict(queries, changed=jnp.asarray(changed))
+            self.state, self._carry, results = self._cycle_delta(
+                self.state, self._carry, queries, updates)
+            self.delta_cycles += 1
+        else:
+            self.state, self._carry, results = self._cycle(
+                self.state, queries, updates)
+            self.full_cycles += 1
+        self.last_scan_path = "delta" if use_delta else "full"
+        self._prev_params[...] = buf.params
+        self._prev_active[...] = buf.active
+        self._inflight.append(_InFlight(
+            admitted, results,
+            n_admitted=sum(len(ts) for ts in admitted.values()),
+            n_dirty=sum(touches.values()),
+            scan_path=self.last_scan_path))
 
     def collect(self) -> Dict[str, List[Ticket]]:
         """Block on the oldest in-flight heartbeat and route its results.
 
         Also surfaces any routing spilled by dispatch()-side
         backpressure, so every admitted ticket appears in exactly one
-        collect() return."""
+        collect() return.  ``last_collect_stats`` aggregates the
+        surfaced heartbeats' admitted/dirty counts and scan path for the
+        caller's CycleResult accounting."""
         out, self._spilled = self._spilled, {}
         for name, tickets in self._collect_oldest().items():
             out.setdefault(name, []).extend(tickets)
+        stats, self._spilled_stats = self._spilled_stats, []
+        paths = {f.scan_path for f in stats}
+        self.last_collect_stats = {
+            "admitted": sum(f.n_admitted for f in stats),
+            "dirty": sum(f.n_dirty for f in stats),
+            "scan_path": (paths.pop() if len(paths) == 1
+                          else "mixed" if paths else "")}
         return out
 
     def _collect_oldest(self) -> Dict[str, List[Ticket]]:
         if not self._inflight:
             return {}
         flight = self._inflight.popleft()
+        self._spilled_stats.append(flight)
         results = flight.results
         jax.block_until_ready(results)
         self.last_overflow = int(results["_overflow"])
+        # full-rescan heartbeats have no delta capacities to violate, so
+        # the invariant reads 0 rather than a stale delta-cycle value
+        self.last_delta_overflow = int(results.get("_delta_overflow", 0))
         now = time.time()
         out = {}
         for name, tickets in flight.admitted.items():
@@ -313,7 +445,11 @@ class SharedDBEngine:
                 break       # budget exhausted with work still queued
             routed = self.collect()
             now = time.time()
-            done.append(CycleResult(tickets=routed, wall_s=now - t_prev))
+            s = self.last_collect_stats
+            done.append(CycleResult(tickets=routed, wall_s=now - t_prev,
+                                    admitted=s["admitted"],
+                                    dirty=s["dirty"],
+                                    scan_path=s["scan_path"]))
             t_prev = now
         return done
 

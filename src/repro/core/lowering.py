@@ -38,6 +38,15 @@ so the traced cycle binds a stage's whole lo/hi predicate matrix from the
 packed admission buffers with one vectorized op — no per-template python
 scatter loops on the hot path, regardless of template count.
 
+Scans are also INCREMENTAL: ``build_cycle`` returns each predicated
+stage's window-local bitmask words as a carry, and ``build_delta_cycle``
+consumes that carry to re-evaluate only (changed admission word columns)
+∪ (the update batch's dirty rows, storage.apply_updates) per heartbeat —
+steady-state scan cost drops from O(rows × queries) to
+O(rows × changed_slots + dirty × queries).  The executor picks the
+flavour host-side per heartbeat and falls back to the full rescan when
+the deltas overflow their fixed capacities.
+
 Per-cycle work remains a static function of table/slot capacities — the
 bounded-computation property (§3.5) — because every shape below is fixed
 at lowering time.
@@ -63,6 +72,15 @@ INT_MAX = ops.INT_MAX
 # partitioned probe (bucket capacity targets one lane-friendly tile)
 PARTITIONED_MIN_CAPACITY = 512
 PARTITION_BUCKET_CAP = 256
+
+# incremental scans: each stage's admission pane covers a CONTIGUOUS
+# range of window_words / DELTA_PANE_DIVISOR words (min 1).  The pane is
+# a static shape, paid on every delta heartbeat, so it trades
+# steady-state cost against how much admission churn still qualifies for
+# the delta path; a contiguous range (rather than scattered words) keeps
+# the merge an in-place dynamic_update_slice on the donated carry —
+# scatter-style merges cost as much as the full compare on small tables.
+DELTA_PANE_DIVISOR = 8
 
 # (template, q_offset_in_window, slot_capacity)
 SlotRange = Tuple[str, int, int]
@@ -90,6 +108,15 @@ class ScanStage:
     referencing template, ``param_idx`` maps (predicated column, window
     slot) to the packed parameter row (-1 = unbound -> pass-all when
     active).
+
+    ``delta_words`` is the stage's admission-pane capacity on the
+    incremental path (``build_delta_cycle``): the CONTIGUOUS range of
+    window words whose slots may change admission between consecutive
+    heartbeats and still take the delta scan.  The pane recomputes
+    exactly that many adjacent word columns over all rows, so a smaller
+    capacity means a cheaper steady-state heartbeat but an earlier
+    fallback to the full rescan — the executor checks the changed span
+    host-side before dispatch.
     """
     table: str
     cols: Tuple[str, ...]
@@ -98,6 +125,7 @@ class ScanStage:
     slots: Tuple[SlotRange, ...]              # referencing templates
     covered: np.ndarray                       # bool[q_window]
     param_idx: np.ndarray                     # int32[max(C,1), q_window]
+    delta_words: int = 1                      # admission-pane word cap
 
     @property
     def q_window(self) -> int:
@@ -211,7 +239,8 @@ def lower_plan(plan: CompiledPlan) -> LoweredPlan:
         scans.append(ScanStage(
             table=table, cols=tuple(node.cols), wlo=wlo, whi=whi,
             slots=_slot_ranges(plan, node.referencing, base),
-            covered=covered, param_idx=param_idx))
+            covered=covered, param_idx=param_idx,
+            delta_words=max(1, (whi - wlo) // DELTA_PANE_DIVISOR)))
 
     joins = []
     for j in plan.joins:
@@ -281,32 +310,26 @@ def lower_plan(plan: CompiledPlan) -> LoweredPlan:
 # ---------------------------------------------------------------------------
 # Executing the lowered graph: one heartbeat of the always-on plan
 # ---------------------------------------------------------------------------
+#
+# Two cycle flavours share everything but the scan phase:
+#
+#   build_cycle        — full rescan: every scan re-evaluates the whole
+#                        table (the bounded worst case, and the seeding
+#                        cycle for the carried scan state).
+#   build_delta_cycle  — incremental: each predicated scan re-evaluates
+#                        only (changed admission word columns) ∪ (the
+#                        update batch's dirty rows) against the PREVIOUS
+#                        heartbeat's carried bitmask words.
+#
+# Both return the per-stage window-local scan words as ``carry`` so the
+# executor can thread them into the next heartbeat.
 
 
-def build_cycle(lowered: LoweredPlan, backend: OperatorBackend):
-    """Returns cycle(storage, queries, updates) -> (storage', results).
-
-    queries: the packed admission batch —
-             {"params": int32[qcap, P_max, 2], "active": bool[qcap]}
-             (ONE host->device transfer per buffer per heartbeat; each
-             template's slot range is a static view into it)
-    updates: {table: update batch dict (see storage.empty_update_batch)}
-    results: per template row-id matrices / group top-k; all fixed shapes,
-    plus "_overflow" (union-cap overflow count) and "_join_rids".
-    """
-    from repro.core import dataquery as dq
+def _build_apply_phase(lowered: LoweredPlan):
+    """Update-apply + partition rebuild (step 1, shared by both cycles)."""
     from repro.core.storage import apply_updates, build_key_partitions
 
-    plan = lowered.plan
-    cat = plan.catalog
-    W = lowered.W
-    limits = jnp.asarray(lowered.limits)
-    join_subs = [jnp.asarray(j.sub_mask) for j in lowered.joins]
-    sort_subs = [jnp.asarray(s.sub_mask) for s in lowered.sorts]
-    route_subs = [jnp.asarray(r.sub_mask) for r in lowered.routes]
-    # lowering-time predicate scatter plans as device constants
-    scan_covered = [jnp.asarray(s.covered) for s in lowered.scans]
-    scan_pidx = [jnp.asarray(s.param_idx) for s in lowered.scans]
+    cat = lowered.plan.catalog
     # PK tables probed by partitioned joins: partition once per heartbeat,
     # shared by every join into the same table
     part_specs = {}
@@ -315,11 +338,10 @@ def build_cycle(lowered: LoweredPlan, backend: OperatorBackend):
             part_specs.setdefault(
                 j.pk_table, (j.pk_col, j.n_partitions, j.bucket_cap))
 
-    def cycle(storage, queries, updates):
-        # 1. apply updates in arrival order (cycle-consistent snapshot),
-        #    then rebuild the partitioned joins' bucket structures from
-        #    the fresh snapshot (update-apply time, paper §4.4 access
-        #    paths)
+    def apply_phase(storage, updates):
+        # apply updates in arrival order (cycle-consistent snapshot),
+        # then rebuild the partitioned joins' bucket structures from the
+        # fresh snapshot (update-apply time, paper §4.4 access paths)
         storage = dict(storage)
         for table, batch in updates.items():
             storage[table] = apply_updates(cat.schemas[table],
@@ -329,39 +351,203 @@ def build_cycle(lowered: LoweredPlan, backend: OperatorBackend):
                                         storage[table]["_valid"],
                                         n_parts, bucket_cap)
             for table, (pk_col, n_parts, bucket_cap) in part_specs.items()}
+        return storage, partitions
 
-        # 2. shared scans (ClockScan): one pass per table for ALL queries,
-        #    each touching only its subscribers' word window.  The whole
-        #    lo/hi predicate matrix binds from the packed admission
-        #    buffers in one vectorized gather (scatter plan precomputed
-        #    at lowering time).
-        scan_masks = {}
+    return apply_phase
+
+
+def _bind_predicates(st: ScanStage, covered, pidx, queries):
+    """One stage's (qok, lo, hi) from the packed admission buffers.
+
+    The whole lo/hi predicate matrix binds in one vectorized gather —
+    the scatter plan (covered, param_idx) is precomputed at lowering
+    time, so there are no per-template python loops on the hot path.
+    """
+    base = st.wlo * 32
+    act = queries["active"][base:base + st.q_window]
+    qok = act & covered                          # admitted subscribers
+    p = queries["params"][base:base + st.q_window]
+    bound = pidx >= 0
+    safe = jnp.maximum(pidx, 0)
+    qs = jnp.arange(st.q_window)
+    p_lo = p[qs[None, :], safe, 0]               # [C, q_window]
+    p_hi = p[qs[None, :], safe, 1]
+    lo = jnp.where(qok[None, :],
+                   jnp.where(bound, p_lo, INT_MIN), INT_MAX)
+    hi = jnp.where(qok[None, :],
+                   jnp.where(bound, p_hi, INT_MAX), INT_MIN)
+    return qok, lo, hi
+
+
+def build_cycle(lowered: LoweredPlan, backend: OperatorBackend):
+    """Returns cycle(storage, queries, updates) -> (storage', carry,
+    results).
+
+    queries: the packed admission batch —
+             {"params": int32[qcap, P_max, 2], "active": bool[qcap]}
+             (ONE host->device transfer per buffer per heartbeat; each
+             template's slot range is a static view into it)
+    updates: {table: update batch dict (see storage.empty_update_batch)}
+    carry:   {table: uint32[T, whi-wlo]} window-local scan words of every
+             predicated stage — the state ``build_delta_cycle`` consumes
+             next heartbeat.
+    results: per template row-id matrices / group top-k; all fixed shapes,
+    plus "_overflow" (union-cap overflow count) and "_join_rids".
+    """
+    from repro.core import dataquery as dq
+
+    W = lowered.W
+    apply_phase = _build_apply_phase(lowered)
+    post_scan = _build_post_scan(lowered, backend)
+    # lowering-time predicate scatter plans as device constants
+    scan_covered = [jnp.asarray(s.covered) for s in lowered.scans]
+    scan_pidx = [jnp.asarray(s.param_idx) for s in lowered.scans]
+
+    def cycle(storage, queries, updates):
+        storage, partitions = apply_phase(storage, updates)
+
+        # shared scans (ClockScan): one pass per table for ALL queries,
+        # each touching only its subscribers' word window.
+        scan_masks, carry = {}, {}
+        for st, covered, pidx in zip(lowered.scans, scan_covered,
+                                     scan_pidx):
+            tbl = storage[st.table]
+            if not st.cols:
+                # no predicated columns: the scan degenerates to
+                # valid-row x active-subscriber — skip the compare kernel
+                base = st.wlo * 32
+                act = queries["active"][base:base + st.q_window]
+                m = dq.pack(tbl["_valid"][:, None] & (act & covered)[None])
+            else:
+                _, lo, hi = _bind_predicates(st, covered, pidx, queries)
+                cols = jnp.stack([tbl[c] for c in st.cols])
+                m = backend.scan(cols, lo, hi, tbl["_valid"])
+                carry[st.table] = m
+            scan_masks[st.table] = jnp.pad(m, ((0, 0),
+                                               (st.wlo, W - st.whi)))
+
+        return storage, carry, post_scan(storage, partitions, scan_masks)
+
+    return cycle
+
+
+def build_delta_cycle(lowered: LoweredPlan, backend: OperatorBackend):
+    """Returns cycle(storage, carry, queries, updates) -> (storage',
+    carry', results): the incremental-scan heartbeat.
+
+    ``carry`` is the previous heartbeat's window-local scan words (the
+    ``build_cycle`` carry).  ``queries`` additionally holds "changed":
+    bool[qcap], true for slots whose (active, params) differ from the
+    previously DISPATCHED heartbeat (computed host-side by the executor).
+    Each predicated scan then refreshes only
+
+      * the admission pane — the contiguous ``st.delta_words``-word
+        range containing every changed slot, recomputed over ALL rows
+        with the regular compare kernel at pane width
+        (32 * delta_words ≪ q_window) and merged with one in-place
+        dynamic_update_slice on the donated carry, and
+      * the dirty rows — the update batch's sorted/unique
+        ``_dirty_rows`` re-evaluated against the FULL window via
+        ``backend.scan_delta`` and scattered back by row on the
+        sorted-unique fast path,
+
+    and carries every other (row, word) pair forward verbatim.  The
+    executor guarantees eligibility host-side (the changed-word SPAN
+    fits the pane, distinct dirty rows fit the set);
+    ``results["_delta_overflow"]`` counts violations as a defensive
+    invariant (0 on every eligible heartbeat).
+
+    Correctness: a carried (row, slot) pair has an unchanged row (not
+    dirty), unchanged slot binding (not changed), and an unchanged
+    snapshot outside the dirty set — so its previous word is exactly
+    what the full rescan would recompute.
+    """
+    from repro.core import dataquery as dq
+
+    plan = lowered.plan
+    cat = plan.catalog
+    W = lowered.W
+    apply_phase = _build_apply_phase(lowered)
+    post_scan = _build_post_scan(lowered, backend)
+    scan_covered = [jnp.asarray(s.covered) for s in lowered.scans]
+    scan_pidx = [jnp.asarray(s.param_idx) for s in lowered.scans]
+
+    def cycle(storage, carry, queries, updates):
+        storage, partitions = apply_phase(storage, updates)
+        changed = queries["changed"]
+
+        scan_masks, new_carry = {}, {}
+        delta_over = jnp.zeros((), jnp.int32)
         for st, covered, pidx in zip(lowered.scans, scan_covered,
                                      scan_pidx):
             tbl = storage[st.table]
             base = st.wlo * 32
-            act = queries["active"][base:base + st.q_window]
-            qok = act & covered                      # admitted subscribers
             if not st.cols:
-                # no predicated columns: the scan degenerates to
-                # valid-row x active-subscriber — skip the compare kernel
-                m = dq.pack(tbl["_valid"][:, None] & qok[None, :])
+                # degenerate scans are O(T*w) bit ops — cheaper to
+                # recompute than to track, so they carry no state
+                act = queries["active"][base:base + st.q_window]
+                m = dq.pack(tbl["_valid"][:, None] & (act & covered)[None])
             else:
-                p = queries["params"][base:base + st.q_window]
-                bound = pidx >= 0
-                safe = jnp.maximum(pidx, 0)
-                qs = jnp.arange(st.q_window)
-                p_lo = p[qs[None, :], safe, 0]       # [C, q_window]
-                p_hi = p[qs[None, :], safe, 1]
-                lo = jnp.where(qok[None, :],
-                               jnp.where(bound, p_lo, INT_MIN), INT_MAX)
-                hi = jnp.where(qok[None, :],
-                               jnp.where(bound, p_hi, INT_MAX), INT_MIN)
+                _, lo, hi = _bind_predicates(st, covered, pidx, queries)
                 cols = jnp.stack([tbl[c] for c in st.cols])
-                m = backend.scan(cols, lo, hi, tbl["_valid"])
+                w = st.whi - st.wlo
+                A = st.delta_words
+
+                # admission pane: the contiguous word range holding every
+                # changed slot, recomputed over all rows and merged with
+                # one in-place dynamic_update_slice on the donated carry
+                qd = changed[base:base + st.q_window] & covered
+                wch = jnp.any(qd.reshape(w, 32), axis=1)
+                first = jnp.argmax(wch).astype(jnp.int32)
+                last = (w - 1
+                        - jnp.argmax(wch[::-1])).astype(jnp.int32)
+                span = jnp.where(jnp.any(wch), last - first + 1, 0)
+                delta_over += jnp.maximum(span - A, 0)
+                w0 = jnp.minimum(first, w - A)
+                lo_a = jax.lax.dynamic_slice(lo, (0, w0 * 32),
+                                             (lo.shape[0], A * 32))
+                hi_a = jax.lax.dynamic_slice(hi, (0, w0 * 32),
+                                             (hi.shape[0], A * 32))
+                pane = backend.scan(cols, lo_a, hi_a, tbl["_valid"])
+                m = jax.lax.dynamic_update_slice(carry[st.table], pane,
+                                                 (0, w0))
+
+                # dirty rows: the update batch's sorted/unique touched
+                # rows, refreshed against the full window and scattered
+                # back by row (pad sentinel == capacity -> dropped)
+                dr = tbl["_dirty_rows"]
+                dwords = backend.scan_delta(cols, lo, hi, tbl["_valid"],
+                                            dr)
+                # tail pads all equal the capacity sentinel: spread them
+                # so the sorted/unique scatter hints hold exactly
+                dru = dr + jnp.where(
+                    dr >= cat.schemas[st.table].capacity,
+                    jnp.arange(dr.shape[0], dtype=jnp.int32), 0)
+                m = m.at[dru].set(dwords, mode="drop",
+                                  indices_are_sorted=True,
+                                  unique_indices=True)
+                delta_over += tbl["_dirty_overflow"].astype(jnp.int32)
+                new_carry[st.table] = m
             scan_masks[st.table] = jnp.pad(m, ((0, 0),
                                                (st.wlo, W - st.whi)))
 
+        results = post_scan(storage, partitions, scan_masks)
+        results["_delta_overflow"] = delta_over
+        return storage, new_carry, results
+
+    return cycle
+
+
+def _build_post_scan(lowered: LoweredPlan, backend: OperatorBackend):
+    """Joins, sorts, group-bys and routing (steps 3-6, shared verbatim
+    by the full and delta cycles)."""
+    plan = lowered.plan
+    limits = jnp.asarray(lowered.limits)
+    join_subs = [jnp.asarray(j.sub_mask) for j in lowered.joins]
+    sort_subs = [jnp.asarray(s.sub_mask) for s in lowered.sorts]
+    route_subs = [jnp.asarray(r.sub_mask) for r in lowered.routes]
+
+    def post_scan(storage, partitions, scan_masks):
         # 3. shared joins: ONE big join per signature, query_id in the
         #    predicate via bitmask intersection; non-subscribers pass
         #    through untouched.
@@ -444,6 +630,6 @@ def build_cycle(lowered: LoweredPlan, backend: OperatorBackend):
 
         # attach join rids so hosts can materialize joined tuples
         results["_join_rids"] = join_rids
-        return storage, results
+        return results
 
-    return cycle
+    return post_scan

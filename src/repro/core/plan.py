@@ -228,29 +228,8 @@ def compile_plan(catalog: Catalog, templates: List[QueryTemplate],
         union_cap=union_cap, group_union_cap=group_union_cap)
 
 
-# ---------------------------------------------------------------------------
-# The cycle function: one heartbeat of the always-on plan
-# ---------------------------------------------------------------------------
-
-
-def build_cycle_fn(plan: CompiledPlan, update_slots, kernels: str = "auto"):
-    """Returns cycle(storage, queries, updates) -> (storage', results).
-
-    Lowers the compiled plan to the staged operator graph (lowering.py)
-    and binds each stage to an operator backend (backends.py):
-
-      kernels="jnp"    -> pure-jnp reference operators (the oracle)
-      kernels="pallas" -> Pallas TPU kernels (interpret mode off-TPU)
-      kernels="auto"   -> REPRO_KERNELS override if set, else Pallas on
-                          TPU and jnp elsewhere
-
-    queries: the packed admission batch —
-             {"params": int32[qcap, n_params_max, 2], "active": bool[qcap]}
-    updates: {table: update batch dict (see storage.empty_update_batch)}
-    results: per template row-id matrices / group top-k; all fixed shapes.
-    """
-    from repro.core.backends import resolve_backend
-    from repro.core.lowering import build_cycle, lower_plan
-
-    del update_slots  # batch shapes are carried by the update batches
-    return build_cycle(lower_plan(plan), resolve_backend(kernels))
+# The cycle functions themselves live in lowering.py: ``build_cycle``
+# (full rescan, seeds the carried scan words) and ``build_delta_cycle``
+# (the incremental heartbeat).  The executor lowers the plan once and
+# binds both to one operator backend (backends.py: kernels="jnp" |
+# "pallas" | "auto", REPRO_KERNELS override honoured).

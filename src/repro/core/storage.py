@@ -37,6 +37,12 @@ class TableSchema:
     # shared joins into the table lower to the blocked key-equality
     # kernel instead of the O(1) index gather (see core/lowering.py).
     key_space: int = 0
+    # fixed capacity of the per-cycle dirty-row set maintained by
+    # ``apply_updates``: the distinct rows a cycle's update batch touched,
+    # which is everything the incremental scan path must re-evaluate.  A
+    # batch that touches more rows sets ``_dirty_overflow`` and the
+    # executor falls back to a safe full rescan for that heartbeat.
+    dirty_cap: int = 128
 
     @property
     def indexed(self) -> bool:
@@ -49,6 +55,14 @@ def empty_table(schema: TableSchema) -> Dict:
     t["_valid"] = jnp.zeros((schema.capacity,), bool)
     t["_n"] = jnp.zeros((), jnp.int32)       # append cursor
     t["_version"] = jnp.zeros((), jnp.int32)
+    # dirty-row set of the LAST applied update batch: ascending distinct
+    # row ids, padded with the ``capacity`` sentinel (kept SORTED+UNIQUE
+    # so the delta scan's scatter-back can use the fast in-place scatter
+    # path; see apply_updates).  Fresh tables are fully clean.
+    t["_dirty_rows"] = jnp.full((schema.dirty_cap,), schema.capacity,
+                                jnp.int32)
+    t["_dirty_n"] = jnp.zeros((), jnp.int32)
+    t["_dirty_overflow"] = jnp.zeros((), bool)
     if schema.indexed:
         t["_pk_index"] = jnp.full((schema.key_space,), -1, jnp.int32)
     return t
@@ -172,9 +186,21 @@ def apply_updates(schema: TableSchema, table: Dict, batch: Dict) -> Dict:
     """Deletes, then column updates, then inserts — all in slot order.
 
     Slot order IS arrival order: the executor fills slots FIFO.
+
+    Besides committing the batch, this maintains the table's per-cycle
+    dirty-row set: ``_dirty_rows`` (int32[schema.dirty_cap], ascending
+    DISTINCT row ids, padded with the ``capacity`` sentinel) holds every
+    row the batch touched — delete targets, update targets, insert
+    landing rows — ``_dirty_n`` counts the distinct rows (capacity-
+    clamped), and ``_dirty_overflow`` flags a batch that touched more
+    distinct rows than the set can hold.  The incremental scan path
+    (core/lowering.py ``build_delta_cycle``) re-evaluates exactly these
+    rows against the carried bitmask words, scattering back with the
+    sorted/unique fast path; an overflowed set forces a full rescan.
     """
     t = dict(table)
     n = t["_n"]
+    touched = []                 # dirty-row candidates, -1 = no-op slot
 
     if schema.pk:
         def locate(keys, mask, valid):
@@ -188,6 +214,7 @@ def apply_updates(schema: TableSchema, table: Dict, batch: Dict) -> Dict:
 
         # deletes: invalidate row, clear pk index
         del_row = locate(batch["del_key"], batch["del_mask"], t["_valid"])
+        touched.append(del_row)
         ok = del_row >= 0
         t["_valid"] = t["_valid"].at[jnp.where(ok, del_row, 0)].set(
             jnp.where(ok, False, t["_valid"][0]))
@@ -200,6 +227,7 @@ def apply_updates(schema: TableSchema, table: Dict, batch: Dict) -> Dict:
         # `_valid`/index so a delete-then-update of the same key in one
         # batch finds nothing, matching arrival-order semantics.
         upd_row = locate(batch["upd_key"], batch["upd_mask"], t["_valid"])
+        touched.append(upd_row)
         for ci, c in enumerate(schema.columns):
             sel = (batch["upd_col"] == ci) & (upd_row >= 0)
             rows = jnp.where(sel, upd_row, schema.capacity)
@@ -221,6 +249,29 @@ def apply_updates(schema: TableSchema, table: Dict, batch: Dict) -> Dict:
             rows.astype(jnp.int32), mode="drop")
     t["_n"] = n_new
     t["_version"] = t["_version"] + 1
+
+    # dirty-row set: mark the touched rows (deletes, updates, insert
+    # landing rows — rows the table dropped for being over capacity are
+    # NOT dirty) on a row bitmap, then compress to the fixed-capacity
+    # sorted/unique id list the delta scan consumes.
+    touched.append(jnp.where(
+        batch["ins_mask"] & (rows < schema.capacity),
+        rows.astype(jnp.int32), -1))
+    cand = jnp.concatenate([x.astype(jnp.int32) for x in touched])
+    D = t["_dirty_rows"].shape[0]
+    cap = schema.capacity
+    if cand.shape[0] == 0:
+        t["_dirty_rows"] = jnp.full((D,), cap, jnp.int32)
+        t["_dirty_n"] = jnp.zeros((), jnp.int32)
+        t["_dirty_overflow"] = jnp.zeros((), bool)
+        return t
+    mark = jnp.zeros((cap,), bool).at[
+        jnp.where(cand >= 0, cand, cap)].set(True, mode="drop")
+    count = jnp.sum(mark.astype(jnp.int32))
+    t["_dirty_rows"] = jnp.nonzero(
+        mark, size=D, fill_value=cap)[0].astype(jnp.int32)
+    t["_dirty_n"] = jnp.minimum(count, D)
+    t["_dirty_overflow"] = count > D
     return t
 
 

@@ -6,7 +6,7 @@ ref.py holds pure-jnp oracles; ops.py holds the jit'd dispatch wrappers
 
 Importing this package registers the ``pallas`` operator backend with
 repro.core.backends, which is how the lowered global plan selects the
-kernels (``build_cycle_fn(..., kernels="pallas")`` or ``"auto"`` on TPU).
+kernels (``SharedDBEngine(..., kernels="pallas")`` or ``"auto"`` on TPU).
 The kernel modules themselves are imported lazily, at first call.
 """
 from __future__ import annotations
@@ -44,6 +44,13 @@ def _pallas_groupby(group_code, values, mask, n_groups: int):
                                  interpret=_interpret())
 
 
+def _pallas_scan_delta(cols, lo, hi, valid, rows):
+    from repro.kernels.delta_scan import delta_scan_pallas
+    return delta_scan_pallas(cols, lo, hi, valid, rows,
+                             interpret=_interpret())
+
+
 _backends.register_backend(_backends.OperatorBackend(
     name="pallas", scan=_pallas_scan, join_block=_pallas_join_block,
-    join_partitioned=_pallas_join_partitioned, groupby=_pallas_groupby))
+    join_partitioned=_pallas_join_partitioned, groupby=_pallas_groupby,
+    scan_delta=_pallas_scan_delta))

@@ -1,0 +1,81 @@
+"""Delta-scan kernel: re-evaluate ONLY the dirty rows of a ClockScan.
+
+Steady-state heartbeats touch a handful of rows (one update batch) while
+the full shared scan re-compares every tuple against every query slot.
+The incremental scan path (core/lowering.py ``build_delta_cycle``) keeps
+the previous heartbeat's bitmask words and asks this kernel for fresh
+words for exactly the rows the update batch dirtied:
+
+  grid             = (D,)            one program per dirty-row slot
+  rows (prefetch)  = int32[D]        dirty row ids; out-of-range values
+                                     (storage pads with the table
+                                     capacity sentinel) are empty slots
+  cols block       = [C, 1]          THE dirty row's column values —
+                                     gathered via scalar prefetch: the
+                                     BlockSpec index_map reads rows[i] to
+                                     pick which column of cols to DMA
+  lo/hi blocks     = [C, Q]          whole predicate matrix resident
+  valid block      = [1]             the dirty row's validity
+  out block        = [1, W]          packed words, scattered back into
+                                     the carried mask by the caller
+
+One row per program keeps the scalar-prefetch gather exact for any dirty
+pattern; D is the fixed (small) dirty capacity, so total work is
+O(D * C * Q) — independent of the table size, which is the whole point.
+Empty slots clamp to a real row, evaluate it, and are dropped by the
+caller's bounds-checked scatter, mirroring partitioned_join's padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(rows_ref, cols_ref, lo_ref, hi_ref, valid_ref, out_ref, *,
+            n_cols: int, qcap: int):
+    ok = jnp.ones((1, qcap), jnp.bool_)
+    for c in range(n_cols):
+        x = cols_ref[c, 0]
+        ok &= (x >= lo_ref[c, :][None, :]) & (x <= hi_ref[c, :][None, :])
+    ok &= valid_ref[0]
+    w = qcap // 32
+    bits = ok.reshape(1, w, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    out_ref[...] = jnp.sum(bits * weights[None, None, :], axis=-1,
+                           dtype=jnp.uint32)
+
+
+def delta_scan_pallas(cols, lo, hi, valid, rows, *, interpret: bool = True):
+    """Same contract as kernels/ref.delta_scan_ref."""
+    C, T = cols.shape
+    Q = lo.shape[1]
+    D = rows.shape[0]
+    assert Q % 32 == 0
+    W = Q // 32
+    kernel = functools.partial(_kernel, n_cols=C, qcap=Q)
+
+    def row(i, rows_ref):                    # pad slots clamp in range
+        return jnp.clip(rows_ref[i], 0, T - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(D,),
+        in_specs=[
+            # the scalar-prefetch gather: rows[i] picks the cols column
+            pl.BlockSpec((C, 1), lambda i, rows_ref: (0, row(i, rows_ref))),
+            pl.BlockSpec((C, Q), lambda i, rows_ref: (0, 0)),
+            pl.BlockSpec((C, Q), lambda i, rows_ref: (0, 0)),
+            pl.BlockSpec((1,), lambda i, rows_ref: (row(i, rows_ref),)),
+        ],
+        out_specs=pl.BlockSpec((1, W), lambda i, rows_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((D, W), jnp.uint32),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), cols, lo, hi, valid)

@@ -18,6 +18,26 @@ def clockscan_ref(cols, lo, hi, valid):
     return dq.pack(ok)
 
 
+def delta_scan_ref(cols, lo, hi, valid, rows):
+    """Dirty-row delta scan oracle.
+
+    cols int32[C,T]; lo/hi int32[C,Q]; valid bool[T]; rows int32[D]
+    (out-of-range values — storage pads with the capacity sentinel — are
+    empty slots) -> uint32[D, Q/32]: the freshly evaluated bitmask words
+    for exactly the gathered rows (empty slots clamp to a real row and
+    are dropped by the caller's bounds-checked scatter).  Same predicate
+    semantics as ``clockscan_ref`` restricted to ``rows``.
+    """
+    C, T = cols.shape
+    safe = jnp.clip(rows, 0, T - 1)
+    ok = jnp.ones((rows.shape[0], lo.shape[1]), bool)
+    for c in range(C):
+        x = cols[c][safe][:, None]
+        ok &= (x >= lo[c][None, :]) & (x <= hi[c][None, :])
+    ok &= valid[safe][:, None]
+    return dq.pack(ok)
+
+
 def bitmask_join_ref(keys_l, mask_l, keys_r, mask_r, valid_r):
     """Block shared join oracle; right keys UNIQUE among valid rows.
 

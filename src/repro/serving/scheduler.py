@@ -95,9 +95,13 @@ class CycleServer:
         self._pending_logits = None
         self.cycles = 0
         self.completed: List[Request] = []
-        # per-cycle wall times of the last run_until_drained (latency
-        # accounting parity with the relational engine's CycleResult)
+        # per-cycle wall times / admitted-prefill / active-slot counts of
+        # the last run_until_drained (latency + load accounting parity
+        # with the relational engine's CycleResult fields)
         self.last_drain_walls: List[float] = []
+        self.last_drain_admitted: List[int] = []
+        self.last_drain_active: List[int] = []
+        self.last_admitted = 0       # prefills admitted by the last beat
 
     def _ctx_len(self) -> int:
         if self.cfg.enc_dec:
@@ -120,8 +124,9 @@ class CycleServer:
         return sum(1 for s in self._slots if s is not None)
 
     # ---------------------------------------------------------- heartbeat
-    def _admit(self):
+    def _admit(self) -> int:
         budget = self.prefill_budget
+        admitted = 0
         for slot in range(self.capacity):
             if budget == 0 or not self._queue:
                 break
@@ -129,6 +134,7 @@ class CycleServer:
                 continue
             req = self._queue.popleft()
             budget -= 1
+            admitted += 1
             P = self.prefill_len
             toks = np.asarray(req.prompt[-P:] if len(req.prompt) >= P
                               else req.prompt + [0] * (P - len(req.prompt)),
@@ -150,6 +156,7 @@ class CycleServer:
             self._slots[slot] = req
             self._pos[slot] = min(len(req.prompt), P)
             self._last_tok[slot] = tok
+        return admitted
 
     def dispatch(self) -> None:
         """Admit + prefill, then launch ONE shared decode step for all
@@ -162,7 +169,7 @@ class CycleServer:
                 "dispatch() with a decode step already in flight: decode "
                 "N+1 consumes N's tokens, collect() the previous cycle "
                 "first")
-        self._admit()
+        self.last_admitted = self._admit()
         tokens = jnp.asarray(self._last_tok[:, None], jnp.int32)
         positions = jnp.asarray(self._pos, jnp.int32)
         logits, self.cache = self._decode(self.params, self.cache, tokens,
@@ -206,14 +213,21 @@ class CycleServer:
     def run_until_drained(self, max_cycles: int = 10000) -> List[Request]:
         """Heartbeat until idle; ``max_cycles`` bounds cycles run.
 
-        Per-cycle wall times land in ``self.last_drain_walls`` — the same
-        latency accounting the relational engine's run_until_drained
-        returns via CycleResult (protocol parity for benchmarks)."""
+        Per-cycle wall times land in ``self.last_drain_walls``, admitted
+        prefills in ``last_drain_admitted`` and post-admission active
+        slots in ``last_drain_active`` — the same latency + load
+        accounting the relational engine's run_until_drained returns via
+        CycleResult (protocol parity for benchmarks and the SLA gate)."""
         out = []
         self.last_drain_walls = []
+        self.last_drain_admitted = []
+        self.last_drain_active = []
         while (self.pending() or self.active()) \
                 and len(self.last_drain_walls) < max_cycles:
             t0 = time.time()
-            out.extend(self.run_cycle())
+            self.dispatch()
+            self.last_drain_admitted.append(self.last_admitted)
+            self.last_drain_active.append(self.active())
+            out.extend(self.collect())
             self.last_drain_walls.append(time.time() - t0)
         return out

@@ -1,0 +1,253 @@
+"""Differential stateful harness: randomized interleaved insert / update
+/ delete / select streams over many heartbeats, asserting SharedDBEngine
+— on BOTH operator backends, with incremental scans on — stays
+ticket-for-ticket equal to the QueryAtATimeEngine oracle.  This is the
+regression net under the delta scan path: every heartbeat after the
+first carries scan words forward, so any stale-carry bug surfaces as a
+ticket mismatch here.
+
+The hypothesis ``RuleBasedStateMachine`` explores arbitrary
+interleavings when hypothesis is installed; a deterministic seeded
+stream over the same world always runs.
+"""
+import numpy as np
+import pytest
+
+from repro.core.baseline import QueryAtATimeEngine
+from repro.core.executor import SharedDBEngine
+from repro.workloads import tpcw
+
+try:
+    from hypothesis import settings, strategies as st
+    from hypothesis.stateful import RuleBasedStateMachine, rule
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+SCALE_I, SCALE_C = 64, 128
+BACKENDS = ("jnp", "pallas")
+INT_MAX = tpcw.INT_MAX
+
+
+def _compare(backend, ticket, want):
+    if "rows" in ticket.result:
+        a = set(int(x) for x in np.asarray(ticket.result["rows"]) if x >= 0)
+        b = set(int(x) for x in want["rows"] if x >= 0)
+        assert a == b, (backend, ticket.template, ticket.params,
+                        sorted(a)[:5], sorted(b)[:5])
+    else:
+        np.testing.assert_allclose(
+            np.sort(np.asarray(ticket.result["scores"])),
+            np.sort(np.asarray(want["scores"])), rtol=1e-6,
+            err_msg=f"{backend}:{ticket.template}")
+
+
+class _World:
+    """Two shared engines (one per backend) + the query-at-a-time oracle,
+    driven by interleaved updates/selects and compared every heartbeat.
+
+    Updates queue on the shared engines and mirror into the oracle at
+    heartbeat time — the oracle's immediate auto-commit then equals the
+    engines' batch-at-cycle-start semantics, because every compared query
+    is also admitted at (or after) that heartbeat.  Mutations only touch
+    keys committed by an earlier heartbeat (watermarks), matching the
+    engine's delete->update->insert intra-batch ordering contract.
+    """
+
+    def __init__(self):
+        rng = np.random.default_rng(0)
+        self.plan = tpcw.build_tpcw_plan(SCALE_I, SCALE_C)
+        data = tpcw.generate_data(rng, SCALE_I, SCALE_C)
+        self.engines = {
+            k: SharedDBEngine(self.plan, tpcw.DEFAULT_UPDATE_SLOTS, data,
+                              jit=False, kernels=k) for k in BACKENDS}
+        self.baseline = QueryAtATimeEngine(self.plan, data, jit=False)
+        self.pending_updates = []
+        self.pending_queries = []
+        self.next_item = SCALE_I
+        self.next_cust = SCALE_C
+        # keys committed by a past heartbeat (safe to update/delete)
+        self.item_watermark = SCALE_I
+        self.cust_watermark = SCALE_C
+        self.heartbeats = 0
+
+    # ------------------------------------------------------------- ops
+    def queue_update(self, update):
+        self.pending_updates.append(update)
+        for eng in self.engines.values():
+            eng.submit_update(*update)
+
+    def insert_item(self, subject, cost):
+        i = self.next_item
+        self.next_item += 1
+        self.queue_update(("item", "insert", {
+            "i_id": i, "i_a_id": i % max(SCALE_I // 4, 1),
+            "i_subject": subject, "i_title": i % tpcw.N_TITLE_TOKENS,
+            "i_pub_date": 11500, "i_cost": cost, "i_srp": cost + 100,
+            "i_stock": 5, "i_related1": 0}))
+
+    def insert_customer(self):
+        c = self.next_cust
+        self.next_cust += 1
+        self.queue_update(("customer", "insert", {
+            "c_id": c, "c_uname": c, "c_passwd": c * 7,
+            "c_addr_id": c % SCALE_C, "c_discount": c % 50,
+            "c_since": 11000, "c_expiration": 13000}))
+
+    def submit(self, name, params):
+        tickets = {k: eng.submit(name, params)
+                   for k, eng in self.engines.items()}
+        self.pending_queries.append((name, params, tickets))
+
+    def heartbeat(self):
+        for u in self.pending_updates:
+            self.baseline.apply_update(*u)
+        self.pending_updates = []
+        for eng in self.engines.values():
+            eng.run_until_drained()
+        for name, params, tickets in self.pending_queries:
+            want = self.baseline.execute(name, params).result
+            for backend, t in tickets.items():
+                assert t.result is not None, (backend, name)
+                _compare(backend, t, want)
+        self.pending_queries = []
+        self.item_watermark = self.next_item
+        self.cust_watermark = self.next_cust
+        self.heartbeats += 1
+        # snapshot parity: the engines' storage equals the oracle's
+        for table in ("item", "customer"):
+            want_t = self.baseline.state[table]
+            for backend, eng in self.engines.items():
+                got_t = eng.state[table]
+                for col in self.plan.catalog.schemas[table].columns:
+                    assert (np.asarray(got_t[col])
+                            == np.asarray(want_t[col])).all(), \
+                        (backend, table, col)
+                assert (np.asarray(got_t["_valid"])
+                        == np.asarray(want_t["_valid"])).all(), \
+                    (backend, table)
+
+
+# ---------------------------------------------------------------- driver
+if HAVE_HYPOTHESIS:
+    class DifferentialEngineMachine(RuleBasedStateMachine):
+        def __init__(self):
+            super().__init__()
+            self.w = _World()
+
+        # mutations (committed keys only — see _World watermarks)
+        @rule(key=st.integers(0, SCALE_I - 1), val=st.integers(0, 9999))
+        def update_item_cost(self, key, val):
+            self.w.queue_update(("item", "update", {
+                "key": key, "col": "i_cost", "val": val}))
+
+        @rule(key=st.integers(0, SCALE_I - 1),
+              subj=st.integers(0, tpcw.N_SUBJECTS - 1))
+        def update_item_subject(self, key, subj):
+            self.w.queue_update(("item", "update", {
+                "key": key, "col": "i_subject", "val": subj}))
+
+        @rule(key=st.integers(0, SCALE_I + 16))
+        def delete_item(self, key):              # sometimes already gone
+            if key < self.w.item_watermark:
+                self.w.queue_update(("item", "delete", {"key": key}))
+
+        @rule(subj=st.integers(0, tpcw.N_SUBJECTS - 1),
+              cost=st.integers(100, 9999))
+        def insert_item(self, subj, cost):
+            self.w.insert_item(subj, cost)
+
+        @rule()
+        def insert_customer(self):
+            self.w.insert_customer()
+
+        @rule(key=st.integers(0, SCALE_C - 1),
+              val=st.integers(12000, 15000))
+        def update_customer_expiration(self, key, val):
+            self.w.queue_update(("customer", "update", {
+                "key": key, "col": "c_expiration", "val": val}))
+
+        # selects
+        @rule(name=st.sampled_from(["admin_item", "get_book",
+                                    "get_related"]),
+              i=st.integers(0, SCALE_I + 16))
+        def select_item(self, name, i):
+            self.w.submit(name, {0: (i, i)})
+
+        @rule(c=st.integers(0, SCALE_C + 8))
+        def select_customer(self, c):
+            self.w.submit("get_customer", {0: (c, c)})
+
+        @rule(s=st.integers(0, tpcw.N_SUBJECTS - 1))
+        def search_subject(self, s):
+            self.w.submit("search_subject", {0: (s, s)})
+
+        @rule(s=st.integers(0, tpcw.N_SUBJECTS - 1))
+        def best_sellers(self, s):
+            self.w.submit("best_sellers", {0: (0, INT_MAX), 1: (s, s)})
+
+        @rule(c=st.integers(0, SCALE_C - 1))
+        def order_display(self, c):
+            self.w.submit("order_display", {0: (c, c)})
+
+        @rule()
+        def heartbeat(self):
+            self.w.heartbeat()
+
+        def teardown(self):
+            self.w.heartbeat()               # flush + final comparison
+
+    DifferentialEngineMachine.TestCase.settings = settings(
+        max_examples=3, stateful_step_count=10, deadline=None)
+    TestDifferentialEngine = DifferentialEngineMachine.TestCase
+
+
+def test_deterministic_interleaved_stream_stays_equal():
+    """The always-on fallback: a seeded interleaving of every operation
+    kind across several heartbeats (runs without hypothesis)."""
+    rng = np.random.default_rng(42)
+    w = _World()
+    for beat in range(4):
+        for _ in range(int(rng.integers(2, 6))):
+            op = rng.integers(0, 6)
+            if op == 0:
+                w.queue_update(("item", "update", {
+                    "key": int(rng.integers(0, SCALE_I)),
+                    "col": "i_cost", "val": int(rng.integers(0, 9999))}))
+            elif op == 1 and w.item_watermark > 0:
+                w.queue_update(("item", "delete", {
+                    "key": int(rng.integers(0, w.item_watermark))}))
+            elif op == 2:
+                w.insert_item(int(rng.integers(0, tpcw.N_SUBJECTS)),
+                              int(rng.integers(100, 9999)))
+            elif op == 3:
+                w.insert_customer()
+            elif op == 4:
+                w.queue_update(("customer", "update", {
+                    "key": int(rng.integers(0, SCALE_C)),
+                    "col": "c_expiration",
+                    "val": int(rng.integers(12000, 15000))}))
+            else:
+                w.queue_update(("item", "update", {
+                    "key": int(rng.integers(0, SCALE_I)),
+                    "col": "i_subject",
+                    "val": int(rng.integers(0, tpcw.N_SUBJECTS))}))
+        w.submit("admin_item", {0: (int(rng.integers(0, SCALE_I)),) * 2})
+        w.submit("get_customer",
+                 {0: (int(rng.integers(0, SCALE_C)),) * 2})
+        w.submit("search_subject",
+                 {0: (int(rng.integers(0, tpcw.N_SUBJECTS)),) * 2})
+        if beat % 2:
+            s = int(rng.integers(0, tpcw.N_SUBJECTS))
+            w.submit("best_sellers", {0: (0, INT_MAX), 1: (s, s)})
+        w.heartbeat()
+    # steady-state tail: slot-stable trickle beats engage the delta path
+    # (the second consecutive single-template beat carries words forward)
+    for _ in range(3):
+        k = int(rng.integers(0, SCALE_I))
+        w.queue_update(("item", "update", {"key": k, "col": "i_cost",
+                                           "val": int(rng.integers(0,
+                                                                   999))}))
+        w.submit("admin_item", {0: (k, k)})
+        w.heartbeat()
+    assert any(eng.delta_cycles > 0 for eng in w.engines.values())

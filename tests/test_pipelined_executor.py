@@ -229,3 +229,26 @@ def test_cycle_server_dispatch_collect_protocol():
     with pytest.raises(RuntimeError):
         srv.dispatch()                       # double dispatch refused
     srv.collect()
+
+
+def test_cycle_server_reports_per_heartbeat_admission_counts():
+    """CycleResult-parity accounting on the serving path: every drained
+    heartbeat records its admitted prefills and active slots, so
+    benchmarks can attribute cycle time to load."""
+    from repro.configs import smoke_config
+    from repro.serving import CycleServer
+    cfg = smoke_config("stablelm-1.6b")
+    srv = CycleServer(cfg, capacity=3, max_seq=32, prefill_len=8,
+                      prefill_budget=2)
+    rng = np.random.default_rng(1)
+    reqs = [srv.submit(rng.integers(1, cfg.vocab, 6).tolist(),
+                       max_new_tokens=3) for _ in range(5)]
+    srv.run_until_drained()
+    assert all(len(r.output) == 3 for r in reqs)
+    n = len(srv.last_drain_walls)
+    assert len(srv.last_drain_admitted) == n
+    assert len(srv.last_drain_active) == n
+    assert sum(srv.last_drain_admitted) == len(reqs)
+    assert srv.last_drain_admitted[0] == 2      # prefill budget caps it
+    assert all(0 <= a <= 3 for a in srv.last_drain_active)
+    assert max(srv.last_drain_active) == 3      # capacity reached

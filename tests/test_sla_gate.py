@@ -1,0 +1,73 @@
+"""Cycle-time SLA regression gate (ROADMAP item).
+
+``python -m benchmarks.run --smoke`` writes ``BENCH_PR3.json`` (delta vs
+full-rescan scan curve, steady-state heartbeat wall time, critical-path
+record); this suite fails when that record regresses past the STORED
+thresholds below instead of silently drifting.  CI regenerates the
+record right before running the tests (see .github/workflows/ci.yml);
+locally the committed record gates until you regenerate it.
+
+The thresholds are deliberately looser than freshly measured numbers
+(scan-phase speedup measures 3-6x, heartbeats tens of milliseconds) so
+the gate trips on order-of-magnitude regressions — a delta path that
+stopped engaging, a heartbeat that went quadratic — not on shared-CPU
+noise.
+"""
+import json
+import os
+
+import pytest
+
+BENCH = os.path.join(os.path.dirname(__file__), os.pardir,
+                     "BENCH_PR3.json")
+
+# stored thresholds — the gate
+SMOKE_HEARTBEAT_BUDGET_US = 3_000_000   # absolute ceiling per heartbeat
+MIN_DELTA_SCAN_SPEEDUP = 2.0            # at 4096 rows (measures 3-6x)
+MAX_DELTA_VS_FULL_HEARTBEAT = 1.35      # steady state must not regress
+MIN_DELTA_CYCLE_FRACTION = 0.8          # steady state must run deltas
+MAX_PIPELINED_SYNC_RATIO = 2.0          # pipelining must not hurt
+MIN_PARTITIONED_JOIN_SPEEDUP = 3.0      # PR-2 gain must not rot
+
+
+@pytest.fixture(scope="module")
+def record():
+    if os.environ.get("REPRO_KERNELS", "jnp") not in ("jnp", "ref",
+                                                      "auto", ""):
+        pytest.skip("SLA record is measured on the jnp backend — other "
+                    "kernel legs would gate a stale record")
+    if not os.path.exists(BENCH):
+        pytest.skip("BENCH_PR3.json missing — run "
+                    "`python -m benchmarks.run --smoke` first")
+    with open(BENCH) as f:
+        return json.load(f)
+
+
+def test_delta_scan_speedup_floor(record):
+    """The incremental scan must keep beating the full rescan at the
+    acceptance point (4096 rows, 13-template TPC-W window)."""
+    big = [c for c in record["delta_scan"]["curve"] if c["rows"] >= 4096]
+    assert big, "curve lost its 4096-row point"
+    assert big[0]["speedup"] >= MIN_DELTA_SCAN_SPEEDUP, big[0]
+
+
+def test_steady_state_heartbeat_runs_delta_and_stays_flat(record):
+    hb = record["delta_scan"]["heartbeat"]
+    assert hb["delta_cycle_fraction"] >= MIN_DELTA_CYCLE_FRACTION, hb
+    assert hb["delta_heartbeat_us"] <= (MAX_DELTA_VS_FULL_HEARTBEAT
+                                        * hb["full_heartbeat_us"]), hb
+    assert hb["delta_heartbeat_us"] <= SMOKE_HEARTBEAT_BUDGET_US, hb
+    assert hb["full_heartbeat_us"] <= SMOKE_HEARTBEAT_BUDGET_US, hb
+
+
+def test_cycle_time_within_budget(record):
+    cyc = record["cycle"]
+    assert cyc["mean_cycle_us_sync"] <= SMOKE_HEARTBEAT_BUDGET_US, cyc
+    assert cyc["mean_cycle_us_pipelined"] <= SMOKE_HEARTBEAT_BUDGET_US, cyc
+    assert cyc["pipelined_sync_ratio"] <= MAX_PIPELINED_SYNC_RATIO, cyc
+
+
+def test_partitioned_join_speedup_floor(record):
+    big = [c for c in record["join_scaling"] if c["keys"] >= 4096]
+    assert big, "join curve lost its 4096-key point"
+    assert big[0]["speedup"] >= MIN_PARTITIONED_JOIN_SPEEDUP, big[0]
