@@ -48,10 +48,11 @@ def _best_of(fn, reps: int) -> float:
     return best
 
 
-def _delta_scan_fn(backend, w: int, A: int, D: int):
+def _delta_scan_fn(backend, w: int, A: int):
     """The build_delta_cycle scan phase as a standalone jittable."""
 
     def fn(prev, cols, lo, hi, valid, dirty_rows, changed):
+        from repro.core.storage import scatter_dirty_rows
         T = cols.shape[1]
         wch = jnp.any(changed.reshape(w, 32), axis=1)
         w0 = jnp.minimum(jnp.argmax(wch).astype(jnp.int32), w - A)
@@ -62,10 +63,7 @@ def _delta_scan_fn(backend, w: int, A: int, D: int):
         pane = backend.scan(cols, lo_a, hi_a, valid)
         m = jax.lax.dynamic_update_slice(prev, pane, (0, w0))
         dwords = backend.scan_delta(cols, lo, hi, valid, dirty_rows)
-        dru = dirty_rows + jnp.where(
-            dirty_rows >= T, jnp.arange(D, dtype=jnp.int32), 0)
-        return m.at[dru].set(dwords, mode="drop",
-                             indices_are_sorted=True, unique_indices=True)
+        return scatter_dirty_rows(m, dirty_rows, dwords, T)
 
     return fn
 
@@ -96,7 +94,7 @@ def scan_curve(sizes=(1024, 4096), reps: int = 5,
         dirty_j = jnp.asarray(dirty, jnp.int32)
         changed_j = jnp.asarray(changed)
 
-        delta_step = _delta_scan_fn(be, w, A, D)
+        delta_step = _delta_scan_fn(be, w, A)
         prev = jax.jit(be.scan)(cols0, lo, hi, valid)
         # the delta phase must reproduce the full rescan bit-for-bit
         got = delta_step(prev, cols0, lo, hi, valid, dirty_j, changed_j)

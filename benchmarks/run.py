@@ -1,18 +1,20 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness: one entry per paper figure (Figs. 7-11) plus the
 beyond-paper roofline report, the critical-path record, and the
-incremental-scan record.
+incremental-scan / incremental-join records.
 
-    python -m benchmarks.run [--quick]   # figures + BENCH_PR3.json
-    python -m benchmarks.run --smoke     # machine-readable record only
+    python -m benchmarks.run [--quick]   # figures + BENCH_PR3/4.json
+    python -m benchmarks.run --smoke     # machine-readable records only
                                          # (the CI cycle-time SLA gate)
 
-Every invocation (re)writes ``BENCH_PR3.json`` — the machine-readable
-perf trajectory: per-heartbeat cycle time, host dispatch/staging time,
-the partitioned-vs-block join scaling curve, the pipelined/sync
-cycle-time ratio, and the delta-vs-full-rescan scan curve + steady-state
-heartbeat.  ``tests/test_sla_gate.py`` fails the build when this record
-regresses past its stored thresholds.
+Every invocation (re)writes the machine-readable perf trajectory:
+``BENCH_PR3.json`` (per-heartbeat cycle time, host dispatch/staging
+time, the partitioned-vs-block join scaling curve, the pipelined/sync
+cycle-time ratio, and the delta-vs-full-rescan scan curve +
+steady-state heartbeat) and ``BENCH_PR4.json`` (the delta-vs-full JOIN
+probe curve + the index-less steady-state heartbeat).
+``tests/test_sla_gate.py`` fails the build when either record regresses
+past its stored thresholds.
 """
 from __future__ import annotations
 
@@ -23,6 +25,8 @@ import time
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           os.pardir, "BENCH_PR3.json")
+BENCH_PR4_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              os.pardir, "BENCH_PR4.json")
 
 
 def _emit(name: str, us: float, derived: str):
@@ -60,6 +64,24 @@ def write_bench_json(smoke: bool) -> dict:
           f"{ds['heartbeat']['full_heartbeat_us']:.0f}us "
           f"(delta fraction "
           f"{ds['heartbeat']['delta_cycle_fraction']:.2f})", flush=True)
+
+    from benchmarks import delta_join_bench
+    record4 = {"pr": 4, "mode": "smoke" if smoke else "full",
+               "delta_join": delta_join_bench.run(smoke=smoke)}
+    path4 = os.path.abspath(BENCH_PR4_JSON)
+    with open(path4, "w") as f:
+        json.dump(record4, f, indent=2)
+        f.write("\n")
+    dj = record4["delta_join"]
+    big = dj["curve"][-1]
+    print(f"== Delta joins -> {path4} ==", flush=True)
+    print(f"delta join {big['rows']} rows: {big['delta_us']:.0f}us vs "
+          f"full probe {big['full_us']:.0f}us ({big['speedup']:.1f}x); "
+          f"index-less steady heartbeat delta "
+          f"{dj['heartbeat']['delta_heartbeat_us']:.0f}us vs full "
+          f"{dj['heartbeat']['full_heartbeat_us']:.0f}us "
+          f"(delta-join fraction "
+          f"{dj['heartbeat']['delta_join_fraction']:.2f})", flush=True)
     return record
 
 

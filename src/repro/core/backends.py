@@ -18,6 +18,8 @@ Backend surface (the shared-operator hot loops):
   join_block(kl, ml, kr, mr, valid_r)       -> (rid, mask)    (shared join)
   join_partitioned(kl, ml, bkeys, brows,
                    bounds, mr)              -> (rid, mask)    (bucketed join)
+  join_delta(kl, rows, bkeys, brows,
+             bounds)                        -> rid int32[D]   (dirty probe)
   groupby(codes, vals, mask, n_groups)      -> (count, sum)
 
 Everything else in the cycle — the dense PK-index gather join, union
@@ -55,6 +57,9 @@ class OperatorBackend:
     groupby: Callable     # (codes[T], vals[T], mask[T,W], G) -> (cnt, sum)
     scan_delta: Callable  # (cols[C,T], lo[C,Q], hi[C,Q], valid[T],
                           #  rows[D] (-1 pad)) -> u32[D,W]  (dirty rescan)
+    join_delta: Callable  # (kl[Tl], rows[D] (pad >= Tl), bkeys[P,B],
+                          #  brows[P,B], bounds[P]) -> rid int32[D]
+                          #  (dirty-spine-row partitioned probe)
 
 
 _REGISTRY: Dict[str, OperatorBackend] = {}
@@ -143,7 +148,13 @@ def _jnp_scan_delta(cols, lo, hi, valid, rows):
     return ref.delta_scan_ref(cols, lo, hi, valid, rows)
 
 
+def _jnp_join_delta(keys_l, rows, bucket_keys, bucket_rows, bounds):
+    from repro.kernels import ref
+    return ref.delta_join_ref(keys_l, rows, bucket_keys, bucket_rows,
+                              bounds)
+
+
 register_backend(OperatorBackend(
     name="jnp", scan=_jnp_scan, join_block=_jnp_join_block,
     join_partitioned=_jnp_join_partitioned, groupby=_jnp_groupby,
-    scan_delta=_jnp_scan_delta))
+    scan_delta=_jnp_scan_delta, join_delta=_jnp_join_delta))

@@ -24,18 +24,28 @@ processing => worst-case latency = 2 x cycle time (§3.5).
 ``run_cycle()`` (dispatch immediately followed by collect) preserves the
 original synchronous semantics for callers that want them.
 
-Scans are incremental: every heartbeat returns the shared scans'
-bitmask words as a carry, and the next dispatch — when the carried
+Scans AND joins are incremental: every heartbeat returns a functional
+carry — the shared scans' bitmask words plus the partitioned joins' key
+partitions — and exposes each join's matched-row-id arrays in
+``results["_join_rids"]``, which the executor threads forward as the
+rid half of the widened carry.  The next dispatch — when the carried
 state exists and the heartbeat's deltas fit their fixed capacities
 (changed admission slots per stage pane, update-touched rows per table
-dirty set) — runs the DELTA cycle, which re-evaluates only those deltas
-against the carried words (lowering.build_delta_cycle).  The choice is
-made host-side from exact admission knowledge, so ineligible heartbeats
-fall back to the full rescan without any data-dependent branching on
-device.  The carry is functional device state produced by one heartbeat
-and consumed by exactly the next, so pipelined in-flight cycles never
-alias it; the host-side ``changed`` staging vector is double-buffered
-with the rest of the admission buffers for the same reason.
+dirty set) — runs a DELTA cycle, which re-evaluates only those deltas
+against the carried words (lowering.build_delta_cycle); when
+additionally NO carried join's PK table was touched (its partitions
+would rebuild, invalidating carried rids), the delta cycle's
+``delta_joins`` variant also re-probes only the dirty spine rows
+against the carried rid arrays.  All choices are made host-side from
+exact admission knowledge, so ineligible heartbeats fall back — full
+rescan for the scans (which reseeds BOTH carry halves), full probe for
+the joins — without any data-dependent branching on device.  The
+scan/parts carry is donated: it is produced by one heartbeat and
+consumed by exactly the next, so pipelined in-flight cycles never alias
+it.  The rid carry is NOT donated — its arrays are also the in-flight
+``results["_join_rids"]`` a later collect still reads — and the
+host-side ``changed`` staging vector is double-buffered with the rest
+of the admission buffers for the same reason.
 """
 from __future__ import annotations
 
@@ -117,15 +127,18 @@ class CycleResult:
     2 x cycle-time latency bound is stated against (§3.5).
 
     ``admitted``/``dirty`` count the queries and update-touched rows the
-    heartbeat carried and ``scan_path`` names the scan flavour it ran
-    ("delta" or "full"; "mixed" when backpressure folded several
-    heartbeats into one collect) — the attribution benchmarks and the
-    SLA gate need to split cycle time between the two paths."""
+    heartbeat carried and ``scan_path``/``join_path`` name the scan and
+    join flavours it ran ("delta" or "full"; "mixed" when backpressure
+    folded several heartbeats into one collect; ``join_path`` is ""
+    when the plan has no delta-eligible join stages) — the attribution
+    benchmarks and the SLA gate need to split cycle time between the
+    paths."""
     tickets: Dict[str, List[Ticket]]
     wall_s: float
     admitted: int = 0
     dirty: int = 0
     scan_path: str = ""
+    join_path: str = ""
 
 
 @dataclasses.dataclass
@@ -136,6 +149,7 @@ class _InFlight:
     n_admitted: int = 0
     n_dirty: int = 0
     scan_path: str = "full"
+    join_path: str = ""
 
 
 class SharedDBEngine:
@@ -144,7 +158,8 @@ class SharedDBEngine:
     def __init__(self, plan: CompiledPlan, update_slots: UpdateSlots,
                  initial_data: Dict[str, Dict[str, np.ndarray]],
                  jit: bool = True, kernels: str = "auto",
-                 pipeline_depth: int = 2, delta_scans: bool = True):
+                 pipeline_depth: int = 2, delta_scans: bool = True,
+                 delta_joins: bool = True):
         self.plan = plan
         self.update_slots = update_slots
         self.state = plan.catalog.init_state(initial_data)
@@ -156,15 +171,36 @@ class SharedDBEngine:
         self._lowered = lower_plan(plan)
         cycle = build_cycle(self._lowered, backend)
         delta = build_delta_cycle(self._lowered, backend)
+        delta_j = build_delta_cycle(self._lowered, backend,
+                                    delta_joins=True)
         # donate storage: the snapshot rolls forward functionally in
-        # place; the delta cycle additionally donates the carried scan
-        # words (each carry is produced by one heartbeat and consumed by
-        # exactly the next, so in-flight cycles never alias it)
+        # place; the delta cycles additionally donate the carried scan
+        # words + key partitions (each carry is produced by one heartbeat
+        # and consumed by exactly the next, so in-flight cycles never
+        # alias it).  The rid carry (arg 2 of the delta-join cycle) is
+        # deliberately NOT donated: its arrays double as the previous
+        # heartbeat's in-flight ``results["_join_rids"]``.
         self._cycle = jax.jit(cycle, donate_argnums=(0,)) if jit else cycle
         self._cycle_delta = jax.jit(delta, donate_argnums=(0, 1)) \
             if jit else delta
+        self._cycle_delta_join = jax.jit(delta_j, donate_argnums=(0, 1)) \
+            if jit else delta_j
         self.delta_scans = delta_scans
-        self._carry = None           # previous heartbeat's scan words
+        self.delta_joins = delta_joins
+        # join stages with carried rid state (non-gather access paths)
+        self._carried_joins = tuple(j for j in self._lowered.joins
+                                    if j.kind != "gather")
+        self._carry = None           # previous heartbeat's scan words +
+        #                              key partitions (donated halves)
+        self._rid_carry = None       # previous heartbeat's join rids
+        # the admission layout the carries were produced under: a delta
+        # heartbeat must never consume a carry whose slot layout differs
+        # (word windows, offsets and packed depth all bake into the
+        # carried shapes/meanings), e.g. across an elastic re-lower
+        self._layout_token = (plan.qcap, plan.n_params_max,
+                              tuple(sorted(plan.offsets.items())),
+                              tuple(sorted(plan.caps.items())))
+        self._carry_token = None
         # (active, params) of the last DISPATCHED heartbeat: the delta
         # path diffs against these to find changed admission slots
         self._prev_params = np.zeros((plan.qcap, plan.n_params_max, 2),
@@ -186,10 +222,14 @@ class SharedDBEngine:
         self.last_overflow = 0    # union-cap overflow of the last collect
         self.delta_cycles = 0     # heartbeats dispatched down each path
         self.full_cycles = 0
-        self.last_scan_path = ""  # path of the last dispatch
+        self.delta_join_cycles = 0    # ... and down each JOIN path
+        self.full_join_cycles = 0
+        self.last_scan_path = ""  # paths of the last dispatch
+        self.last_join_path = ""
         self.last_delta_overflow = 0   # defensive invariant (always 0)
+        self.last_parts_rebuilt: Dict[str, bool] = {}
         self.last_collect_stats = {"admitted": 0, "dirty": 0,
-                                   "scan_path": ""}
+                                   "scan_path": "", "join_path": ""}
 
     # ------------------------------------------------------------------ API
     def submit(self, template: str, params: Dict[str, Any]) -> Ticket:
@@ -321,6 +361,21 @@ class SharedDBEngine:
                 return False
         return True
 
+    def _join_delta_eligible(self, touches: Dict[str, int]) -> bool:
+        """Host-side delta-JOIN admission control (conservative).
+
+        True iff the plan has carried join stages, a rid carry exists,
+        and NO carried stage's PK table was touched this heartbeat — a
+        touched PK side rebuilds its partitions
+        (storage.refresh_key_partitions), which can move/retire the rows
+        the carried rids point at.  Spine-side dirty capacity is already
+        guaranteed by ``_delta_eligible`` (it bounds every table's
+        touches), so the delta probe's dirty set is exact.
+        """
+        if not self._carried_joins or self._rid_carry is None:
+            return False
+        return all(touches[j.pk_table] == 0 for j in self._carried_joins)
+
     def dispatch(self) -> None:
         """Admit one heartbeat's work and launch the global plan.
 
@@ -346,23 +401,54 @@ class SharedDBEngine:
         changed = self._diff_admission(buf)
         use_delta = (self.delta_scans and self._carry is not None
                      and self._delta_eligible(changed, touches))
+        use_delta_join = (use_delta and self.delta_joins
+                          and self._join_delta_eligible(touches))
         if use_delta:
+            # carry-invalidation audit: a delta heartbeat must never
+            # consume a carry produced under a different admission
+            # layout (the carried words/rids are positional in it); a
+            # full-rescan heartbeat reseeds BOTH halves below, so the
+            # token always matches unless the plan was re-lowered
+            # without resetting the carries.
+            assert self._carry_token == self._layout_token, (
+                "delta heartbeat would consume a carry produced under a "
+                "different admission layout — reset the carries "
+                f"(carry {self._carry_token} != plan "
+                f"{self._layout_token})")
             queries = dict(queries, changed=jnp.asarray(changed))
-            self.state, self._carry, results = self._cycle_delta(
-                self.state, self._carry, queries, updates)
+            if use_delta_join:
+                self.state, self._carry, results = self._cycle_delta_join(
+                    self.state, self._carry, self._rid_carry, queries,
+                    updates)
+            else:
+                self.state, self._carry, results = self._cycle_delta(
+                    self.state, self._carry, queries, updates)
             self.delta_cycles += 1
         else:
             self.state, self._carry, results = self._cycle(
                 self.state, queries, updates)
             self.full_cycles += 1
+        # both carry halves are (re)seeded by EVERY heartbeat: the
+        # scan/parts half from the cycle's carry output, the rid half
+        # from the results (full-probe heartbeats — including every full
+        # rescan — return freshly probed rids for all spine rows)
+        self._rid_carry = results["_join_rids"]
+        self._carry_token = self._layout_token
         self.last_scan_path = "delta" if use_delta else "full"
+        if self._carried_joins:
+            self.last_join_path = "delta" if use_delta_join else "full"
+            if use_delta_join:
+                self.delta_join_cycles += 1
+            else:
+                self.full_join_cycles += 1
         self._prev_params[...] = buf.params
         self._prev_active[...] = buf.active
         self._inflight.append(_InFlight(
             admitted, results,
             n_admitted=sum(len(ts) for ts in admitted.values()),
             n_dirty=sum(touches.values()),
-            scan_path=self.last_scan_path))
+            scan_path=self.last_scan_path,
+            join_path=self.last_join_path))
 
     def collect(self) -> Dict[str, List[Ticket]]:
         """Block on the oldest in-flight heartbeat and route its results.
@@ -376,12 +462,17 @@ class SharedDBEngine:
         for name, tickets in self._collect_oldest().items():
             out.setdefault(name, []).extend(tickets)
         stats, self._spilled_stats = self._spilled_stats, []
-        paths = {f.scan_path for f in stats}
+
+        def one_path(paths):
+            paths = {p for p in paths if p}
+            return (paths.pop() if len(paths) == 1
+                    else "mixed" if paths else "")
+
         self.last_collect_stats = {
             "admitted": sum(f.n_admitted for f in stats),
             "dirty": sum(f.n_dirty for f in stats),
-            "scan_path": (paths.pop() if len(paths) == 1
-                          else "mixed" if paths else "")}
+            "scan_path": one_path(f.scan_path for f in stats),
+            "join_path": one_path(f.join_path for f in stats)}
         return out
 
     def _collect_oldest(self) -> Dict[str, List[Ticket]]:
@@ -395,6 +486,8 @@ class SharedDBEngine:
         # full-rescan heartbeats have no delta capacities to violate, so
         # the invariant reads 0 rather than a stale delta-cycle value
         self.last_delta_overflow = int(results.get("_delta_overflow", 0))
+        self.last_parts_rebuilt = {
+            t: bool(v) for t, v in results["_parts_rebuilt"].items()}
         now = time.time()
         out = {}
         for name, tickets in flight.admitted.items():
@@ -449,7 +542,8 @@ class SharedDBEngine:
             done.append(CycleResult(tickets=routed, wall_s=now - t_prev,
                                     admitted=s["admitted"],
                                     dirty=s["dirty"],
-                                    scan_path=s["scan_path"]))
+                                    scan_path=s["scan_path"],
+                                    join_path=s["join_path"]))
             t_prev = now
         return done
 

@@ -47,6 +47,25 @@ O(rows × changed_slots + dirty × queries).  The executor picks the
 flavour host-side per heartbeat and falls back to the full rescan when
 the deltas overflow their fixed capacities.
 
+JOINS are incremental too.  The heartbeat carry is widened from scan
+words to (scan words, key partitions) plus the per-join rid arrays the
+executor threads from ``results["_join_rids"]``: a JoinStage's rid
+vector is a pure function of (the spine's fk column, the PK table's
+keys/validity) — query admission only changes the MASKS, never the
+rids — so on a heartbeat where the PK side was untouched, the carried
+rids stay exact for every spine row outside the update batch's dirty
+set.  ``build_delta_cycle(..., delta_joins=True)`` re-probes ONLY the
+dirty spine rows (``backend.join_delta`` / kernels/delta_join.py for
+partitioned stages, a dense dirty-row probe for block stages) and merges
+them into the carried rid array with the same sorted-scatter fast path
+as delta scans.  The executor falls back to the full probe — within the
+delta-scan cycle, via the ``delta_joins=False`` flavour — whenever a PK
+table was written this heartbeat (its partitions rebuild, see
+storage.refresh_key_partitions), a dirty set overflowed, or no rid
+carry exists yet (first heartbeat / post-relayout), and the full-rescan
+cycle reseeds BOTH carry halves.  The O(1) gather joins carry nothing:
+the index gather is already cheaper than any merge.
+
 Per-cycle work remains a static function of table/slot capacities — the
 bounded-computation property (§3.5) — because every shape below is fixed
 at lowering time.
@@ -134,7 +153,15 @@ class ScanStage:
 
 @dataclasses.dataclass(frozen=True)
 class JoinStage:
-    """One shared PK-FK join per (spine, fk, pk) signature."""
+    """One shared PK-FK join per (spine, fk, pk) signature.
+
+    Non-``gather`` stages are DELTA-ELIGIBLE: their rid vector depends
+    only on the spine's fk column and the PK table's snapshot — not on
+    admission — so the executor carries it across heartbeats and
+    ``build_delta_cycle(delta_joins=True)`` re-probes just the dirty
+    spine rows, falling back to the full probe when the PK side was
+    written (partitions rebuilt) or the dirty set overflowed.
+    """
     spine: str
     fk_col: str
     pk_table: str
@@ -143,6 +170,11 @@ class JoinStage:
     sub_mask: np.ndarray                      # uint32[W] subscriber words
     n_partitions: int = 0                     # partitioned kind only
     bucket_cap: int = 0
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        """The stage's identity in ``results["_join_rids"]`` / rid carry."""
+        return (self.spine, self.fk_col, self.pk_table)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -311,7 +343,8 @@ def lower_plan(plan: CompiledPlan) -> LoweredPlan:
 # Executing the lowered graph: one heartbeat of the always-on plan
 # ---------------------------------------------------------------------------
 #
-# Two cycle flavours share everything but the scan phase:
+# Two cycle flavours share everything but the scan phase (the delta
+# flavour additionally comes in two JOIN variants):
 #
 #   build_cycle        — full rescan: every scan re-evaluates the whole
 #                        table (the bounded worst case, and the seeding
@@ -319,15 +352,22 @@ def lower_plan(plan: CompiledPlan) -> LoweredPlan:
 #   build_delta_cycle  — incremental: each predicated scan re-evaluates
 #                        only (changed admission word columns) ∪ (the
 #                        update batch's dirty rows) against the PREVIOUS
-#                        heartbeat's carried bitmask words.
+#                        heartbeat's carried bitmask words.  With
+#                        ``delta_joins=True`` the non-gather joins also
+#                        re-probe only the dirty spine rows against the
+#                        previous heartbeat's carried rid arrays.
 #
-# Both return the per-stage window-local scan words as ``carry`` so the
-# executor can thread them into the next heartbeat.
+# Both return ``carry = {"scan": {table: words}, "parts": {table:
+# partitions}}`` so the executor can thread it into the next heartbeat;
+# the rid half of the widened carry travels through
+# ``results["_join_rids"]`` (distinct buffers from the donated carry, so
+# pipelined in-flight results never alias a later dispatch's donation).
 
 
 def _build_apply_phase(lowered: LoweredPlan):
-    """Update-apply + partition rebuild (step 1, shared by both cycles)."""
-    from repro.core.storage import apply_updates, build_key_partitions
+    """Update-apply + partition refresh (step 1, shared by all cycles)."""
+    from repro.core.storage import (apply_updates, build_key_partitions,
+                                    refresh_key_partitions)
 
     cat = lowered.plan.catalog
     # PK tables probed by partitioned joins: partition once per heartbeat,
@@ -338,20 +378,29 @@ def _build_apply_phase(lowered: LoweredPlan):
             part_specs.setdefault(
                 j.pk_table, (j.pk_col, j.n_partitions, j.bucket_cap))
 
-    def apply_phase(storage, updates):
+    def apply_phase(storage, updates, prev_parts=None):
         # apply updates in arrival order (cycle-consistent snapshot),
-        # then rebuild the partitioned joins' bucket structures from the
-        # fresh snapshot (update-apply time, paper §4.4 access paths)
+        # then refresh the partitioned joins' bucket structures from the
+        # fresh snapshot (update-apply time, paper §4.4 access paths).
+        # With a carried ``prev_parts`` (the delta cycles) a table whose
+        # batch touched nothing keeps its partitions — rebuilding an
+        # untouched table is idempotent, so skipping the sort is exact —
+        # and ``rebuilt`` records which tables actually re-sorted.
         storage = dict(storage)
         for table, batch in updates.items():
             storage[table] = apply_updates(cat.schemas[table],
                                            storage[table], batch)
-        partitions = {
-            table: build_key_partitions(storage[table][pk_col],
-                                        storage[table]["_valid"],
-                                        n_parts, bucket_cap)
-            for table, (pk_col, n_parts, bucket_cap) in part_specs.items()}
-        return storage, partitions
+        partitions, rebuilt = {}, {}
+        for table, (pk_col, n_parts, bucket_cap) in part_specs.items():
+            t = storage[table]
+            if prev_parts is None:
+                partitions[table] = build_key_partitions(
+                    t[pk_col], t["_valid"], n_parts, bucket_cap)
+                rebuilt[table] = jnp.ones((), bool)
+            else:
+                partitions[table], rebuilt[table] = refresh_key_partitions(
+                    t, pk_col, n_parts, bucket_cap, prev_parts[table])
+        return storage, partitions, rebuilt
 
     return apply_phase
 
@@ -388,11 +437,14 @@ def build_cycle(lowered: LoweredPlan, backend: OperatorBackend):
              (ONE host->device transfer per buffer per heartbeat; each
              template's slot range is a static view into it)
     updates: {table: update batch dict (see storage.empty_update_batch)}
-    carry:   {table: uint32[T, whi-wlo]} window-local scan words of every
-             predicated stage — the state ``build_delta_cycle`` consumes
-             next heartbeat.
+    carry:   {"scan": {table: uint32[T, whi-wlo]} window-local scan words
+             of every predicated stage, "parts": {table: key partitions
+             of every partitioned-join PK table}} — the state
+             ``build_delta_cycle`` consumes next heartbeat.
     results: per template row-id matrices / group top-k; all fixed shapes,
-    plus "_overflow" (union-cap overflow count) and "_join_rids".
+    plus "_overflow" (union-cap overflow count), "_join_rids" (whose
+    arrays the executor threads forward as the rid half of the widened
+    carry) and "_parts_rebuilt" (which PK tables re-sorted this beat).
     """
     from repro.core import dataquery as dq
 
@@ -404,11 +456,11 @@ def build_cycle(lowered: LoweredPlan, backend: OperatorBackend):
     scan_pidx = [jnp.asarray(s.param_idx) for s in lowered.scans]
 
     def cycle(storage, queries, updates):
-        storage, partitions = apply_phase(storage, updates)
+        storage, partitions, rebuilt = apply_phase(storage, updates)
 
         # shared scans (ClockScan): one pass per table for ALL queries,
         # each touching only its subscribers' word window.
-        scan_masks, carry = {}, {}
+        scan_masks, scan_carry = {}, {}
         for st, covered, pidx in zip(lowered.scans, scan_covered,
                                      scan_pidx):
             tbl = storage[st.table]
@@ -422,24 +474,31 @@ def build_cycle(lowered: LoweredPlan, backend: OperatorBackend):
                 _, lo, hi = _bind_predicates(st, covered, pidx, queries)
                 cols = jnp.stack([tbl[c] for c in st.cols])
                 m = backend.scan(cols, lo, hi, tbl["_valid"])
-                carry[st.table] = m
+                scan_carry[st.table] = m
             scan_masks[st.table] = jnp.pad(m, ((0, 0),
                                                (st.wlo, W - st.whi)))
 
-        return storage, carry, post_scan(storage, partitions, scan_masks)
+        carry = {"scan": scan_carry, "parts": partitions}
+        results = post_scan(storage, partitions, scan_masks)
+        results["_parts_rebuilt"] = rebuilt
+        return storage, carry, results
 
     return cycle
 
 
-def build_delta_cycle(lowered: LoweredPlan, backend: OperatorBackend):
-    """Returns cycle(storage, carry, queries, updates) -> (storage',
-    carry', results): the incremental-scan heartbeat.
+def build_delta_cycle(lowered: LoweredPlan, backend: OperatorBackend,
+                      delta_joins: bool = False):
+    """Returns the incremental heartbeat:
+    cycle(storage, carry, queries, updates) -> (storage', carry',
+    results), or — with ``delta_joins=True`` —
+    cycle(storage, carry, rid_carry, queries, updates).
 
-    ``carry`` is the previous heartbeat's window-local scan words (the
-    ``build_cycle`` carry).  ``queries`` additionally holds "changed":
-    bool[qcap], true for slots whose (active, params) differ from the
-    previously DISPATCHED heartbeat (computed host-side by the executor).
-    Each predicated scan then refreshes only
+    ``carry`` is the previous heartbeat's ``{"scan": window-local scan
+    words, "parts": key partitions}`` (the ``build_cycle`` carry).
+    ``queries`` additionally holds "changed": bool[qcap], true for slots
+    whose (active, params) differ from the previously DISPATCHED
+    heartbeat (computed host-side by the executor).  Each predicated
+    scan then refreshes only
 
       * the admission pane — the contiguous ``st.delta_words``-word
         range containing every changed slot, recomputed over ALL rows
@@ -451,18 +510,36 @@ def build_delta_cycle(lowered: LoweredPlan, backend: OperatorBackend):
         ``backend.scan_delta`` and scattered back by row on the
         sorted-unique fast path,
 
-    and carries every other (row, word) pair forward verbatim.  The
-    executor guarantees eligibility host-side (the changed-word SPAN
-    fits the pane, distinct dirty rows fit the set);
+    and carries every other (row, word) pair forward verbatim.  Key
+    partitions refresh the same way: a PK table whose batch touched
+    nothing keeps its carried buckets (storage.refresh_key_partitions).
+
+    With ``delta_joins=True``, ``rid_carry`` is the previous heartbeat's
+    ``results["_join_rids"]`` and every non-gather JoinStage re-probes
+    ONLY its spine's dirty rows (``backend.join_delta`` for partitioned
+    stages, a dirty-row key-equality probe for block stages), merging
+    the fresh rids into the carried array with the same sorted-scatter
+    fast path.  The executor only dispatches this variant when NO
+    carried stage's PK table was touched this heartbeat, so every
+    carried rid was probed against partitions identical to this
+    snapshot's.
+
+    The executor guarantees eligibility host-side (the changed-word SPAN
+    fits the pane, distinct dirty rows fit every table's set);
     ``results["_delta_overflow"]`` counts violations as a defensive
     invariant (0 on every eligible heartbeat).
 
-    Correctness: a carried (row, slot) pair has an unchanged row (not
-    dirty), unchanged slot binding (not changed), and an unchanged
+    Correctness: a carried (row, slot) scan bit has an unchanged row
+    (not dirty), unchanged slot binding (not changed), and an unchanged
     snapshot outside the dirty set — so its previous word is exactly
-    what the full rescan would recompute.
+    what the full rescan would recompute.  A carried join rid is a pure
+    function of (fk value, PK snapshot), BOTH unchanged for non-dirty
+    spine rows on a PK-untouched heartbeat — admission changes never
+    invalidate rids, they only change the masks, which are recomputed
+    from the merged scan words every heartbeat.
     """
     from repro.core import dataquery as dq
+    from repro.core.storage import scatter_dirty_rows
 
     plan = lowered.plan
     cat = plan.catalog
@@ -471,9 +548,12 @@ def build_delta_cycle(lowered: LoweredPlan, backend: OperatorBackend):
     post_scan = _build_post_scan(lowered, backend)
     scan_covered = [jnp.asarray(s.covered) for s in lowered.scans]
     scan_pidx = [jnp.asarray(s.param_idx) for s in lowered.scans]
+    carried_spines = sorted({j.spine for j in lowered.joins
+                             if j.kind != "gather"})
 
-    def cycle(storage, carry, queries, updates):
-        storage, partitions = apply_phase(storage, updates)
+    def cycle(storage, carry, rid_carry, queries, updates):
+        storage, partitions, rebuilt = apply_phase(storage, updates,
+                                                   carry["parts"])
         changed = queries["changed"]
 
         scan_masks, new_carry = {}, {}
@@ -509,8 +589,8 @@ def build_delta_cycle(lowered: LoweredPlan, backend: OperatorBackend):
                 hi_a = jax.lax.dynamic_slice(hi, (0, w0 * 32),
                                              (hi.shape[0], A * 32))
                 pane = backend.scan(cols, lo_a, hi_a, tbl["_valid"])
-                m = jax.lax.dynamic_update_slice(carry[st.table], pane,
-                                                 (0, w0))
+                m = jax.lax.dynamic_update_slice(carry["scan"][st.table],
+                                                 pane, (0, w0))
 
                 # dirty rows: the update batch's sorted/unique touched
                 # rows, refreshed against the full window and scattered
@@ -518,39 +598,55 @@ def build_delta_cycle(lowered: LoweredPlan, backend: OperatorBackend):
                 dr = tbl["_dirty_rows"]
                 dwords = backend.scan_delta(cols, lo, hi, tbl["_valid"],
                                             dr)
-                # tail pads all equal the capacity sentinel: spread them
-                # so the sorted/unique scatter hints hold exactly
-                dru = dr + jnp.where(
-                    dr >= cat.schemas[st.table].capacity,
-                    jnp.arange(dr.shape[0], dtype=jnp.int32), 0)
-                m = m.at[dru].set(dwords, mode="drop",
-                                  indices_are_sorted=True,
-                                  unique_indices=True)
+                m = scatter_dirty_rows(m, dr, dwords,
+                                       cat.schemas[st.table].capacity)
                 delta_over += tbl["_dirty_overflow"].astype(jnp.int32)
                 new_carry[st.table] = m
             scan_masks[st.table] = jnp.pad(m, ((0, 0),
                                                (st.wlo, W - st.whi)))
 
-        results = post_scan(storage, partitions, scan_masks)
-        results["_delta_overflow"] = delta_over
-        return storage, new_carry, results
+        if delta_joins:
+            # defensive: a carried join's spine dirty set must not have
+            # overflowed either (the host checks the same thing exactly)
+            for spine in carried_spines:
+                delta_over += \
+                    storage[spine]["_dirty_overflow"].astype(jnp.int32)
 
-    return cycle
+        results = post_scan(storage, partitions, scan_masks,
+                            rid_carry=rid_carry)
+        results["_delta_overflow"] = delta_over
+        results["_parts_rebuilt"] = rebuilt
+        return storage, {"scan": new_carry, "parts": partitions}, results
+
+    if delta_joins:
+        return cycle
+    # full-probe variant: same signature minus the rid carry
+    return lambda storage, carry, queries, updates: cycle(
+        storage, carry, None, queries, updates)
 
 
 def _build_post_scan(lowered: LoweredPlan, backend: OperatorBackend):
-    """Joins, sorts, group-bys and routing (steps 3-6, shared verbatim
-    by the full and delta cycles)."""
+    """Joins, sorts, group-bys and routing (steps 3-6, shared by all
+    cycle flavours; ``rid_carry`` switches the joins to the delta
+    probe)."""
+    from repro.core.storage import locate_rows_by_key, scatter_dirty_rows
+
     plan = lowered.plan
+    cat = plan.catalog
     limits = jnp.asarray(lowered.limits)
     join_subs = [jnp.asarray(j.sub_mask) for j in lowered.joins]
     sort_subs = [jnp.asarray(s.sub_mask) for s in lowered.sorts]
     route_subs = [jnp.asarray(r.sub_mask) for r in lowered.routes]
 
-    def post_scan(storage, partitions, scan_masks):
+    def post_scan(storage, partitions, scan_masks, rid_carry=None):
         # 3. shared joins: ONE big join per signature, query_id in the
         #    predicate via bitmask intersection; non-subscribers pass
-        #    through untouched.
+        #    through untouched.  With a carried rid array (delta-join
+        #    heartbeats) the probe shrinks to the spine's dirty rows:
+        #    fresh rids merge into the carry on the sorted-scatter fast
+        #    path and the bitmask intersection — which DOES depend on
+        #    this heartbeat's admission — is recomputed from the merged
+        #    scan words as usual.
         spine_masks = dict(scan_masks)
         join_rids = {}
         for st, sub in zip(lowered.joins, join_subs):
@@ -561,6 +657,24 @@ def _build_post_scan(lowered: LoweredPlan, backend: OperatorBackend):
                     tbl[st.fk_col], m,
                     storage[st.pk_table]["_pk_index"],
                     scan_masks[st.pk_table])
+            elif rid_carry is not None:
+                cap = cat.schemas[st.spine].capacity
+                dr = tbl["_dirty_rows"]
+                if st.kind == "partitioned":
+                    bkeys, brows, bounds = partitions[st.pk_table]
+                    rid_d = backend.join_delta(tbl[st.fk_col], dr,
+                                               bkeys, brows, bounds)
+                else:  # block: dirty-row key-equality probe (tiny PK)
+                    pk_tbl = storage[st.pk_table]
+                    kd = tbl[st.fk_col][jnp.clip(dr, 0, cap - 1)]
+                    rid_d = locate_rows_by_key(pk_tbl[st.pk_col], kd,
+                                               pk_tbl["_valid"])
+                rid = scatter_dirty_rows(rid_carry[st.key], dr, rid_d,
+                                         cap)
+                mask_r = scan_masks[st.pk_table]
+                gathered = mask_r[jnp.clip(rid, 0, mask_r.shape[0] - 1)]
+                combined = jnp.where((rid >= 0)[:, None], m & gathered,
+                                     jnp.uint32(0))
             elif st.kind == "partitioned":
                 bkeys, brows, bounds = partitions[st.pk_table]
                 rid, combined = backend.join_partitioned(
@@ -573,7 +687,7 @@ def _build_post_scan(lowered: LoweredPlan, backend: OperatorBackend):
                     scan_masks[st.pk_table], pk_tbl["_valid"])
             spine_masks[st.spine] = (combined & sub[None, :]) \
                 | (m & ~sub[None, :])
-            join_rids[(st.spine, st.fk_col, st.pk_table)] = rid
+            join_rids[st.key] = rid
 
         # 4. shared sorts + fused per-query top-n + routing (Gamma): the
         #    sort runs over the bounded UNION of tuples wanted by the

@@ -169,6 +169,61 @@ def build_key_partitions(keys, valid, n_partitions: int, bucket_cap: int):
     return bucket_keys, bucket_rows, bucket_keys[:, 0]
 
 
+def scatter_dirty_rows(dst, rows, vals, capacity: int):
+    """Scatter per-dirty-row values into a row-indexed array on the
+    sorted/unique fast path.
+
+    ``rows`` is a ``_dirty_rows`` set (ascending DISTINCT row ids padded
+    with the ``capacity`` sentinel — see ``apply_updates``); ``vals``
+    holds one update per slot (leading axis D).  The tail pads all equal
+    the sentinel, so they are spread by slot position to keep the
+    scatter's sorted/unique hints exact while staying out of range —
+    ``mode="drop"`` then discards them.  Shared by the delta scan's
+    word scatter and the delta join's rid merge (core/lowering.py).
+    """
+    D = rows.shape[0]
+    spread = rows + jnp.where(rows >= capacity,
+                              jnp.arange(D, dtype=jnp.int32), 0)
+    return dst.at[spread].set(vals, mode="drop",
+                              indices_are_sorted=True,
+                              unique_indices=True)
+
+
+def partitions_stale(table: Dict):
+    """True iff this cycle's update batch could have changed the table's
+    key partitions (bool scalar, traced).
+
+    ``apply_updates`` maintains the per-cycle dirty-row set; a table whose
+    batch touched no rows (and did not overflow the set) has a snapshot
+    identical to the previous heartbeat's, so its sorted bucket structure
+    — a pure function of (key column, validity) — is identical too.
+    """
+    return (table["_dirty_n"] > 0) | table["_dirty_overflow"]
+
+
+def refresh_key_partitions(table: Dict, pk_col: str, n_partitions: int,
+                           bucket_cap: int, prev):
+    """Rebuild a table's key partitions ONLY if this cycle dirtied it.
+
+    ``prev`` is the previous heartbeat's ``build_key_partitions`` result
+    (carried functionally by the executor, like the scan words).  Returns
+    ``(partitions, rebuilt)`` where ``rebuilt`` — exposed to the cycle's
+    results as ``_parts_rebuilt`` — says whether the sort actually ran
+    this heartbeat: the signal the delta-join path's full-probe fallback
+    keys off (a rebuilt PK side invalidates nothing for correctness —
+    rebuilding an untouched table is idempotent — but a TOUCHED PK side
+    means carried join rids may be stale).  The branch is a
+    ``lax.cond``, so steady-state heartbeats skip the O(T log T) sort.
+    """
+    stale = partitions_stale(table)
+    return jax.lax.cond(
+        stale,
+        lambda _: build_key_partitions(table[pk_col], table["_valid"],
+                                       n_partitions, bucket_cap),
+        lambda p: p,
+        prev), stale
+
+
 def locate_rows_by_key(keys_col, probe, valid):
     """Row holding key ``probe[i]`` among valid rows (-1 = absent).
 

@@ -50,7 +50,13 @@ def _pallas_scan_delta(cols, lo, hi, valid, rows):
                              interpret=_interpret())
 
 
+def _pallas_join_delta(keys_l, rows, bucket_keys, bucket_rows, bounds):
+    from repro.kernels.delta_join import delta_join_pallas
+    return delta_join_pallas(keys_l, rows, bucket_keys, bucket_rows,
+                             bounds, interpret=_interpret())
+
+
 _backends.register_backend(_backends.OperatorBackend(
     name="pallas", scan=_pallas_scan, join_block=_pallas_join_block,
     join_partitioned=_pallas_join_partitioned, groupby=_pallas_groupby,
-    scan_delta=_pallas_scan_delta))
+    scan_delta=_pallas_scan_delta, join_delta=_pallas_join_delta))

@@ -1,0 +1,76 @@
+"""Delta-join kernel: re-probe ONLY the dirty spine rows of a
+partitioned shared join.
+
+A carried join rid array (core/lowering.py ``build_delta_cycle`` with
+delta joins) stays exact for every spine row whose fk key did not change
+while the PK side's partitions were not rebuilt — so a steady-state
+heartbeat only needs fresh rids for the update batch's dirty spine rows.
+This kernel is the partitioned probe of kernels/partitioned_join.py
+restricted to that fixed-capacity dirty set:
+
+  grid              = (D,)          one program per dirty-row slot
+  bidx (prefetch)   = int32[D]      the dirty row's bucket index — the
+                                    ``searchsorted`` routing over the P
+                                    bucket bounds runs in XLA outside
+                                    (it needs the KEY VALUE, which no
+                                    BlockSpec index_map can see); the
+                                    kernel uses it to pick which bucket
+                                    pane to DMA
+  kd block          = [1]           the dirty row's fk key (gathered in
+                                    XLA alongside the routing)
+  bkeys/brows block = [1, B]        THE routed bucket's keys / row ids
+  out block         = [1]           matched PK row id (-1 = none),
+                                    scattered back into the carried rid
+                                    array by the caller
+
+One row per program keeps the scalar-prefetch gather exact for any dirty
+pattern; D is the fixed (small) dirty capacity, so total work is
+O(D * B) — independent of the spine size, which is the whole point
+(the full probe is O(Tl * B)).  Empty slots (storage pads the dirty set
+with the capacity sentinel) clamp to a real row, evaluate it, and are
+dropped by the caller's bounds-checked scatter, mirroring delta_scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(bidx_ref, kd_ref, bkeys_ref, brows_ref, rid_ref):
+    hit = (bkeys_ref[...] == kd_ref[0]) & (brows_ref[...] >= 0)  # [1, B]
+    rid_ref[0] = jnp.max(jnp.where(hit, brows_ref[...], -1))
+
+
+def delta_join_pallas(keys_l, rows, bucket_keys, bucket_rows, bounds, *,
+                      interpret: bool = True):
+    """Same contract as kernels/ref.delta_join_ref."""
+    P, B = bucket_keys.shape
+    T = keys_l.shape[0]
+    D = rows.shape[0]
+    # XLA prologue, shared with the reference probe: gather the dirty
+    # rows' keys (pad slots clamp in range) and route each to its ONE
+    # candidate bucket — the last whose bound <= key
+    safe = jnp.clip(rows, 0, T - 1)
+    kd = keys_l[safe]
+    b = jnp.searchsorted(bounds, kd, side="right").astype(jnp.int32) - 1
+    b = jnp.clip(b, 0, P - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(D,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, bidx_ref: (i,)),
+            # the scalar-prefetch gather: bidx[i] picks the bucket pane
+            pl.BlockSpec((1, B), lambda i, bidx_ref: (bidx_ref[i], 0)),
+            pl.BlockSpec((1, B), lambda i, bidx_ref: (bidx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, bidx_ref: (i,)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((D,), jnp.int32),
+        interpret=interpret,
+    )(b, kd, bucket_keys, bucket_rows)

@@ -38,6 +38,29 @@ def delta_scan_ref(cols, lo, hi, valid, rows):
     return dq.pack(ok)
 
 
+def delta_join_ref(keys_l, rows, bucket_keys, bucket_rows, bounds):
+    """Dirty-row partitioned-join probe oracle.
+
+    keys_l int32[Tl] (the spine's full fk column); rows int32[D] dirty
+    spine row ids (out-of-range values — storage pads with the capacity
+    sentinel — are empty slots); bucket_keys/bucket_rows int32[P, B],
+    bounds int32[P] per ``storage.build_key_partitions``.  Returns
+    rid int32[D]: the matched PK row (-1 = no match) for exactly the
+    gathered rows — empty slots clamp to a real row, evaluate it, and
+    are dropped by the caller's bounds-checked scatter.  Same probe
+    contract as ``partitioned_join_ref`` restricted to ``rows`` (a key k
+    lives in the LAST bucket whose bound <= k; duplicates resolve to the
+    max row id).
+    """
+    P, B = bucket_keys.shape
+    safe = jnp.clip(rows, 0, keys_l.shape[0] - 1)
+    kd = keys_l[safe]
+    b = jnp.searchsorted(bounds, kd, side="right").astype(jnp.int32) - 1
+    b = jnp.clip(b, 0, P - 1)
+    hit = (bucket_keys[b] == kd[:, None]) & (bucket_rows[b] >= 0)
+    return jnp.max(jnp.where(hit, bucket_rows[b], -1), axis=1)
+
+
 def bitmask_join_ref(keys_l, mask_l, keys_r, mask_r, valid_r):
     """Block shared join oracle; right keys UNIQUE among valid rows.
 

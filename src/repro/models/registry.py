@@ -72,9 +72,10 @@ class ModelApi:
             params, grads, opt_state, self.opt_cfg)
         return loss, params, opt_state, gnorm
 
-    def prefill(self, params, batch, cache_capacity: Optional[int] = None):
+    def prefill(self, params, batch, cache_capacity: Optional[int] = None,
+                last_pos=None):
         return transformer.prefill(params, batch, self.cfg, self.axes,
-                                   cache_capacity)
+                                   cache_capacity, last_pos=last_pos)
 
     def decode_step(self, params, caches, tokens, positions):
         return transformer.decode_step(params, caches, tokens, positions,

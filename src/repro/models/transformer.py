@@ -455,8 +455,16 @@ def loss_fn(params, batch, cfg: ArchConfig, axes: MeshAxes = MeshAxes()):
 
 
 def prefill(params, batch, cfg: ArchConfig, axes: MeshAxes = MeshAxes(),
-            cache_capacity: Optional[int] = None):
-    """Run the prompt; returns (last-token logits [B, V], cache)."""
+            cache_capacity: Optional[int] = None, last_pos=None):
+    """Run the prompt; returns (last-token logits [B, V], cache).
+
+    ``last_pos`` (scalar, may be traced) selects WHICH position's logits
+    to return; default is S - 1.  Fixed-shape servers right-pad short
+    prompts to the compiled prefill length, and under causal attention
+    the hidden state at the true last PROMPT position is identical to an
+    unpadded prefill's — while position S - 1 would be a pad token's —
+    so they pass the real last index here and keep one compiled shape.
+    """
     tokens = batch["tokens"]
     B, S = tokens.shape
     cap = cache_capacity or S
@@ -467,7 +475,12 @@ def prefill(params, batch, cfg: ArchConfig, axes: MeshAxes = MeshAxes(),
     x, _, caches = _run_program(params, prog, x, cfg, axes, positions, ctx,
                                 emit_cache=True, cache_capacity=cap,
                                 remat=False)
-    logits = _unembed(params, cfg, x[:, -1:], axes)
+    if last_pos is None:
+        x_last = x[:, -1:]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_pos, jnp.int32), 1, axis=1)
+    logits = _unembed(params, cfg, x_last, axes)
     return logits[:, 0], caches
 
 

@@ -38,6 +38,9 @@ class Request:
     first_token_time: Optional[float] = None
     done_time: Optional[float] = None
     slot: int = -1
+    # the request hit the KV-cache capacity (max_seq) before producing
+    # max_new_tokens and was force-finished to protect the cache
+    truncated: bool = False
 
 
 def _cache_insert(cache, cache1, slot):
@@ -82,9 +85,13 @@ class CycleServer:
         self._decode = jax.jit(
             lambda p, c, t, pos: api.decode_step(p, c, t, pos),
             donate_argnums=(1,))
+        # ``last`` (traced scalar) is the index of the prompt's true last
+        # token inside the right-padded prefill window: passing it as
+        # runtime data keeps ONE compiled prefill for every prompt length
         self._prefill = jax.jit(
-            lambda p, batch: api.prefill(batch=batch, params=p,
-                                         cache_capacity=max_seq))
+            lambda p, batch, last: api.prefill(batch=batch, params=p,
+                                               cache_capacity=max_seq,
+                                               last_pos=last))
         self._insert = jax.jit(_cache_insert, donate_argnums=(0,),
                                static_argnums=(2,))
         self._queue: collections.deque = collections.deque()
@@ -139,6 +146,16 @@ class CycleServer:
             toks = np.asarray(req.prompt[-P:] if len(req.prompt) >= P
                               else req.prompt + [0] * (P - len(req.prompt)),
                               np.int32)
+            # short prompts are RIGHT-padded to the compiled prefill
+            # shape, so the first token must come from the true last
+            # prompt position — position P - 1 holds a pad token, and
+            # its logits are garbage for the continuation.  Causal
+            # attention makes position n_real - 1 identical to an
+            # unpadded prefill's last position (it never sees the pads).
+            # An EMPTY prompt has no last token; it degenerates to
+            # conditioning on the single pad token at position 0 (the
+            # clamp keeps last_pos in range) rather than indexing at -1.
+            n_real = max(1, min(len(req.prompt), P))
             batch = {"tokens": jnp.asarray(toks[None])}
             if self.cfg.enc_dec:
                 batch["frames"] = jnp.zeros(
@@ -147,14 +164,15 @@ class CycleServer:
                 batch["vision"] = jnp.zeros(
                     (1, self.cfg.n_vision_tokens, self.cfg.d_model),
                     jnp.bfloat16)
-            logits, cache1 = self._prefill(self.params, batch)
+            logits, cache1 = self._prefill(self.params, batch,
+                                           jnp.int32(n_real - 1))
             self.cache = self._insert(self.cache, cache1, slot)
             tok = int(jnp.argmax(logits[0]))
             req.slot = slot
             req.output.append(tok)
             req.first_token_time = time.time()
             self._slots[slot] = req
-            self._pos[slot] = min(len(req.prompt), P)
+            self._pos[slot] = n_real
             self._last_tok[slot] = tok
         return admitted
 
@@ -195,13 +213,29 @@ class CycleServer:
                 continue
             tok = int(nxt[slot])
             req.output.append(tok)
-            self._pos[slot] = min(self._pos[slot] + 1, self.max_seq - 1)
-            self._last_tok[slot] = tok
-            if len(req.output) >= req.max_new_tokens:
+            # the decode step that just ran wrote KV at self._pos[slot];
+            # the next step would write at +1.  A request whose next
+            # position would leave the cache is FORCE-FINISHED: clamping
+            # the position instead would overwrite the same KV entry
+            # every subsequent step, silently corrupting the context of
+            # a still-running generation.
+            hit_cap = self._pos[slot] + 1 >= self.max_seq
+            if len(req.output) >= req.max_new_tokens or hit_cap:
+                req.truncated = hit_cap and \
+                    len(req.output) < req.max_new_tokens
                 req.done_time = now
                 finished.append(req)
                 self.completed.append(req)
                 self._slots[slot] = None
+                # park the freed slot at position 0: idle slots still
+                # flow through the shared decode step (bounded
+                # computation), and their dummy KV writes must stay in
+                # bounds; admission overwrites the slot's cache wholesale
+                self._pos[slot] = 0
+                self._last_tok[slot] = 0
+            else:
+                self._pos[slot] += 1
+                self._last_tok[slot] = tok
         self.cycles += 1
         return finished
 

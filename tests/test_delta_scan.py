@@ -143,7 +143,7 @@ def _recording_backend(record):
     backends.register_backend(backends.OperatorBackend(
         name="recording-jnp", scan=scan, join_block=base.join_block,
         join_partitioned=base.join_partitioned, groupby=base.groupby,
-        scan_delta=base.scan_delta))
+        scan_delta=base.scan_delta, join_delta=base.join_delta))
     return "recording-jnp"
 
 
@@ -245,10 +245,10 @@ def test_empty_update_batches_carry_words_unchanged(tpcw_world):
     b = drive(SharedDBEngine(plan, tpcw.DEFAULT_UPDATE_SLOTS, data,
                              jit=False, delta_scans=False))
     assert a.delta_cycles == 2 and b.delta_cycles == 0
-    assert set(a._carry) == set(b._carry)
-    for table in a._carry:
-        assert (np.asarray(a._carry[table])
-                == np.asarray(b._carry[table])).all(), table
+    assert set(a._carry["scan"]) == set(b._carry["scan"])
+    for table in a._carry["scan"]:
+        assert (np.asarray(a._carry["scan"][table])
+                == np.asarray(b._carry["scan"][table])).all(), table
 
 
 def _overflow_world():

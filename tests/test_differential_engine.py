@@ -52,11 +52,19 @@ class _World:
     is also admitted at (or after) that heartbeat.  Mutations only touch
     keys committed by an earlier heartbeat (watermarks), matching the
     engine's delete->update->insert intra-batch ordering contract.
+
+    ``dense_pk_index=False`` forces every join onto the index-less
+    access paths (partitioned/block), which is the configuration that
+    exercises the delta-JOIN carry: item writes are PK-side writes for
+    the order_line->item and cart->item joins (full-probe fallback
+    beats), customer writes leave every PK table untouched (carried-rid
+    beats).
     """
 
-    def __init__(self):
+    def __init__(self, dense_pk_index: bool = True):
         rng = np.random.default_rng(0)
-        self.plan = tpcw.build_tpcw_plan(SCALE_I, SCALE_C)
+        self.plan = tpcw.build_tpcw_plan(SCALE_I, SCALE_C,
+                                         dense_pk_index=dense_pk_index)
         data = tpcw.generate_data(rng, SCALE_I, SCALE_C)
         self.engines = {
             k: SharedDBEngine(self.plan, tpcw.DEFAULT_UPDATE_SLOTS, data,
@@ -201,6 +209,69 @@ if HAVE_HYPOTHESIS:
         max_examples=3, stateful_step_count=10, deadline=None)
     TestDifferentialEngine = DifferentialEngineMachine.TestCase
 
+    class IndexlessDeltaJoinMachine(RuleBasedStateMachine):
+        """Random interleavings over the INDEX-LESS world, where every
+        join runs a partitioned access path and heartbeats carry rid
+        arrays: item writes are PK-side writes (full-probe fallback
+        beats), customer writes leave all PK tables untouched
+        (carried-rid beats), and the slot-stable ``joins_beat`` rule
+        keeps the delta-join path engaging between mutations.  Every
+        heartbeat still compares ticket-for-ticket against the oracle
+        plus snapshot equality, whatever path ran."""
+
+        def __init__(self):
+            super().__init__()
+            self.w = _World(dense_pk_index=False)
+
+        # PK-side mutations (partition rebuild -> full-probe fallback)
+        @rule(key=st.integers(0, SCALE_I - 1), val=st.integers(0, 9999))
+        def update_item_cost(self, key, val):
+            self.w.queue_update(("item", "update", {
+                "key": key, "col": "i_cost", "val": val}))
+
+        @rule(key=st.integers(0, SCALE_I + 16))
+        def delete_item(self, key):
+            if key < self.w.item_watermark:
+                self.w.queue_update(("item", "delete", {"key": key}))
+
+        @rule(subj=st.integers(0, tpcw.N_SUBJECTS - 1),
+              cost=st.integers(100, 9999))
+        def insert_item(self, subj, cost):
+            self.w.insert_item(subj, cost)
+
+        # spine-only mutations (PK tables untouched -> carried rids)
+        @rule(key=st.integers(0, SCALE_C - 1),
+              val=st.integers(12000, 15000))
+        def update_customer_expiration(self, key, val):
+            self.w.queue_update(("customer", "update", {
+                "key": key, "col": "c_expiration", "val": val}))
+
+        # slot-stable join admission: the same three templates, varying
+        # only one template's params (rotating whole templates would
+        # sweep the PK-side scan windows and overflow the admission pane
+        # every beat, silently keeping the delta-join path cold)
+        @rule(o=st.integers(0, 40))
+        def joins_beat(self, o):
+            self.w.submit("order_lines", {0: (o, o)})
+            self.w.submit("get_cart", {0: (12, 12)})
+            self.w.submit("get_book", {0: (5, 5)})
+            self.w.heartbeat()
+
+        @rule(c=st.integers(0, SCALE_C + 8))
+        def select_customer(self, c):
+            self.w.submit("get_customer", {0: (c, c)})
+
+        @rule()
+        def heartbeat(self):
+            self.w.heartbeat()
+
+        def teardown(self):
+            self.w.heartbeat()               # flush + final comparison
+
+    IndexlessDeltaJoinMachine.TestCase.settings = settings(
+        max_examples=2, stateful_step_count=8, deadline=None)
+    TestIndexlessDeltaJoin = IndexlessDeltaJoinMachine.TestCase
+
 
 def test_deterministic_interleaved_stream_stays_equal():
     """The always-on fallback: a seeded interleaving of every operation
@@ -251,3 +322,74 @@ def test_deterministic_interleaved_stream_stays_equal():
         w.submit("admin_item", {0: (k, k)})
         w.heartbeat()
     assert any(eng.delta_cycles > 0 for eng in w.engines.values())
+
+
+def test_deterministic_stream_indexless_delta_join_parity():
+    """Ticket-for-ticket parity on the delta-JOIN path, both backends:
+    an index-less world (every join partitioned) driven through
+
+      * carried-rid beats — customer updates leave all PK tables
+        untouched, so non-gather joins merge dirty spine rids into the
+        carry;
+      * PK-side-write beats — item updates rebuild the item partitions
+        and force the full-probe fallback;
+      * a dirty-overflow beat — more item rows than ``dirty_cap`` forces
+        the full rescan, reseeding both carry halves.
+
+    Every heartbeat's tickets are compared against the query-at-a-time
+    oracle and the snapshots checked for column equality (see _World).
+    """
+    rng = np.random.default_rng(7)
+    w = _World(dense_pk_index=False)
+
+    def submit_joins(o_id):
+        # slot-stable admission: the same three join templates every
+        # beat, varying only order_lines' parameter.  A PK-side scan
+        # stage covers every template that JOINS into the table, so
+        # rotating whole templates would sweep the item stage's window
+        # and overflow the contiguous admission pane — varying one
+        # template's params keeps the changed span to its own slot word.
+        w.submit("order_lines", {0: (o_id, o_id)})
+        w.submit("get_cart", {0: (12, 12)})
+        w.submit("get_book", {0: (5, 5)})
+
+    # seed + two PK-side-write beats (item partitions rebuild)
+    for beat in range(3):
+        if beat:
+            w.queue_update(("item", "update", {
+                "key": int(rng.integers(0, SCALE_I)), "col": "i_cost",
+                "val": int(rng.integers(100, 9999))}))
+        submit_joins(10 + beat)
+        w.heartbeat()
+        assert all(eng.last_join_path == "full"
+                   for eng in w.engines.values())
+    # carried-rid beats: customer-only updates, join templates active
+    for beat in range(4):
+        w.queue_update(("customer", "update", {
+            "key": int(rng.integers(0, SCALE_C)), "col": "c_expiration",
+            "val": int(rng.integers(12000, 15000))}))
+        submit_joins(20 + beat)
+        w.heartbeat()
+    assert all(eng.delta_join_cycles >= 3 for eng in w.engines.values())
+    # dirty-overflow beat: touch more item rows than dirty_cap holds in
+    # ONE cycle (updates + deletes on distinct keys, since either kind's
+    # slot budget alone is below the dirty capacity)
+    dirty_cap = w.plan.catalog.schemas["item"].dirty_cap
+    slots = tpcw.DEFAULT_UPDATE_SLOTS
+    n_upd = min(slots.n_update, dirty_cap)
+    for k in range(n_upd):
+        w.queue_update(("item", "update", {"key": k, "col": "i_stock",
+                                           "val": 1}))
+    for k in range(n_upd, dirty_cap + 1):
+        w.queue_update(("item", "delete", {"key": k}))
+    submit_joins(30)
+    w.heartbeat()
+    assert all(eng.last_scan_path == "full"
+               for eng in w.engines.values())
+    # recovery: the full beat reseeded everything — delta joins resume
+    w.queue_update(("customer", "update", {
+        "key": 1, "col": "c_expiration", "val": 14999}))
+    submit_joins(31)
+    w.heartbeat()
+    assert all(eng.last_join_path == "delta"
+               for eng in w.engines.values())

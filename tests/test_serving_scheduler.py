@@ -1,0 +1,107 @@
+"""CycleServer correctness regressions (serving/scheduler.py).
+
+Two admission/collection bugs fixed in this suite's presence:
+
+  * short prompts are right-padded to the compiled prefill length, and
+    the first token used to be read from the final PAD position's
+    logits instead of the true last prompt token's;
+  * generations reaching the KV-cache capacity used to pin at the last
+    cache position, overwriting the same KV entry every step instead of
+    finishing the request.
+
+Kept hypothesis-free so the regressions gate on every environment.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models.registry import get_model
+from repro.serving import CycleServer
+
+
+def test_short_prompt_first_token_matches_unpadded_prefill():
+    """Regression: prompts shorter than prefill_len are right-padded, so
+    the first token must come from the TRUE last prompt position — the
+    logits at the final pad position belong to a pad token.  Under
+    causal attention the unpadded prefill is the exact oracle."""
+    cfg = smoke_config("stablelm-1.6b")
+    srv = CycleServer(cfg, capacity=2, max_seq=32, prefill_len=8)
+    api = get_model(cfg)
+    for prompt in ([5, 17, 3], [9], list(range(1, 8))):
+        r = srv.submit(list(prompt), max_new_tokens=1)
+        srv.run_until_drained()
+        logits, _ = api.prefill(
+            srv.params, {"tokens": jnp.asarray([prompt], jnp.int32)},
+            cache_capacity=32)
+        assert r.output[0] == int(jnp.argmax(logits[0])), prompt
+
+
+def test_empty_prompt_degenerates_to_pad_conditioning():
+    """An empty prompt has no last token: it conditions on the single
+    pad token at position 0 (last_pos clamps to 0, never -1) and still
+    completes cleanly."""
+    cfg = smoke_config("stablelm-1.6b")
+    srv = CycleServer(cfg, capacity=1, max_seq=16, prefill_len=4)
+    api = get_model(cfg)
+    r = srv.submit([], max_new_tokens=2)
+    srv.run_until_drained(max_cycles=20)
+    assert len(r.output) == 2 and r.done_time is not None
+    logits, _ = api.prefill(
+        srv.params, {"tokens": jnp.asarray([[0]], jnp.int32)},
+        cache_capacity=16)
+    assert r.output[0] == int(jnp.argmax(logits[0]))
+
+
+def test_full_length_prompt_unchanged_by_last_pos_fix():
+    """A prompt exactly prefill_len long takes the same first token as
+    before the fix (last real position == last position)."""
+    cfg = smoke_config("stablelm-1.6b")
+    srv = CycleServer(cfg, capacity=1, max_seq=32, prefill_len=8)
+    api = get_model(cfg)
+    prompt = list(range(1, 9))
+    r = srv.submit(prompt, max_new_tokens=1)
+    srv.run_until_drained()
+    logits, _ = api.prefill(
+        srv.params, {"tokens": jnp.asarray([prompt], jnp.int32)},
+        cache_capacity=32)
+    assert r.output[0] == int(jnp.argmax(logits[0]))
+
+
+def test_cap_hit_force_finishes_cleanly():
+    """Regression: a generation reaching max_seq must complete (marked
+    truncated) instead of pinning at the last cache position — and the
+    freed slot must keep serving new requests."""
+    cfg = smoke_config("stablelm-1.6b")
+    srv = CycleServer(cfg, capacity=2, max_seq=16, prefill_len=8,
+                      prefill_budget=2)
+    prompt = list(range(1, 9))
+    r = srv.submit(prompt, max_new_tokens=64)     # wants more than fits
+    done = srv.run_until_drained(max_cycles=200)
+    # positions 8..15 decode (8 steps) + the prefill token = 9 tokens
+    assert r in done
+    assert r.truncated
+    assert r.done_time is not None
+    assert len(r.output) == 9 < 64
+    assert srv.active() == 0
+    # positions never left the cache
+    assert (srv._pos < srv.max_seq).all()
+    # the slot is reusable and exact afterwards
+    r2 = srv.submit(prompt, max_new_tokens=3)
+    srv.run_until_drained(max_cycles=50)
+    assert len(r2.output) == 3 and not r2.truncated
+
+
+def test_mixed_cap_and_normal_completion_one_batch():
+    """One slot hits the cap while its neighbour finishes normally —
+    both route out of the same shared decode heartbeats."""
+    cfg = smoke_config("stablelm-1.6b")
+    srv = CycleServer(cfg, capacity=2, max_seq=12, prefill_len=4,
+                      prefill_budget=2)
+    long_r = srv.submit([1, 2, 3, 4], max_new_tokens=99)
+    short_r = srv.submit([4, 3, 2], max_new_tokens=2)
+    srv.run_until_drained(max_cycles=100)
+    assert not short_r.truncated and len(short_r.output) == 2
+    assert long_r.truncated
+    # prefill token + decodes at positions 4..11 = 9 tokens
+    assert len(long_r.output) == 9
+    assert np.all(srv._pos < srv.max_seq)

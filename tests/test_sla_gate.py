@@ -2,16 +2,18 @@
 
 ``python -m benchmarks.run --smoke`` writes ``BENCH_PR3.json`` (delta vs
 full-rescan scan curve, steady-state heartbeat wall time, critical-path
-record); this suite fails when that record regresses past the STORED
-thresholds below instead of silently drifting.  CI regenerates the
-record right before running the tests (see .github/workflows/ci.yml);
-locally the committed record gates until you regenerate it.
+record) and ``BENCH_PR4.json`` (delta vs full JOIN probe curve,
+index-less steady-state heartbeat); this suite fails when either record
+regresses past the STORED thresholds below instead of silently
+drifting.  CI regenerates the records right before running the tests
+(see .github/workflows/ci.yml); locally the committed records gate
+until you regenerate them.
 
 The thresholds are deliberately looser than freshly measured numbers
-(scan-phase speedup measures 3-6x, heartbeats tens of milliseconds) so
-the gate trips on order-of-magnitude regressions — a delta path that
-stopped engaging, a heartbeat that went quadratic — not on shared-CPU
-noise.
+(scan-phase speedup measures 3-6x, join-phase 10-20x, heartbeats tens
+of milliseconds) so the gate trips on order-of-magnitude regressions —
+a delta path that stopped engaging, a heartbeat that went quadratic —
+not on shared-CPU noise.
 """
 import json
 import os
@@ -20,6 +22,8 @@ import pytest
 
 BENCH = os.path.join(os.path.dirname(__file__), os.pardir,
                      "BENCH_PR3.json")
+BENCH_PR4 = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "BENCH_PR4.json")
 
 # stored thresholds — the gate
 SMOKE_HEARTBEAT_BUDGET_US = 3_000_000   # absolute ceiling per heartbeat
@@ -28,19 +32,31 @@ MAX_DELTA_VS_FULL_HEARTBEAT = 1.35      # steady state must not regress
 MIN_DELTA_CYCLE_FRACTION = 0.8          # steady state must run deltas
 MAX_PIPELINED_SYNC_RATIO = 2.0          # pipelining must not hurt
 MIN_PARTITIONED_JOIN_SPEEDUP = 3.0      # PR-2 gain must not rot
+MIN_DELTA_JOIN_SPEEDUP = 3.0            # at 4096 rows (measures 10-20x)
+MIN_DELTA_JOIN_FRACTION = 0.8           # steady state must carry rids
+MAX_DELTA_VS_FULL_JOIN_HEARTBEAT = 1.35  # carried rids must not regress
 
 
-@pytest.fixture(scope="module")
-def record():
+def _load(path, name):
     if os.environ.get("REPRO_KERNELS", "jnp") not in ("jnp", "ref",
                                                       "auto", ""):
         pytest.skip("SLA record is measured on the jnp backend — other "
                     "kernel legs would gate a stale record")
-    if not os.path.exists(BENCH):
-        pytest.skip("BENCH_PR3.json missing — run "
+    if not os.path.exists(path):
+        pytest.skip(f"{name} missing — run "
                     "`python -m benchmarks.run --smoke` first")
-    with open(BENCH) as f:
+    with open(path) as f:
         return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def record():
+    return _load(BENCH, "BENCH_PR3.json")
+
+
+@pytest.fixture(scope="module")
+def record_pr4():
+    return _load(BENCH_PR4, "BENCH_PR4.json")
 
 
 def test_delta_scan_speedup_floor(record):
@@ -71,3 +87,21 @@ def test_partitioned_join_speedup_floor(record):
     big = [c for c in record["join_scaling"] if c["keys"] >= 4096]
     assert big, "join curve lost its 4096-key point"
     assert big[0]["speedup"] >= MIN_PARTITIONED_JOIN_SPEEDUP, big[0]
+
+
+def test_delta_join_speedup_floor(record_pr4):
+    """The carried-rid join phase must keep beating the full partitioned
+    re-probe at the acceptance point (4096-row tables, TPC-W window)."""
+    big = [c for c in record_pr4["delta_join"]["curve"]
+           if c["rows"] >= 4096]
+    assert big, "delta-join curve lost its 4096-row point"
+    assert big[0]["speedup"] >= MIN_DELTA_JOIN_SPEEDUP, big[0]
+
+
+def test_steady_state_heartbeat_carries_join_rids(record_pr4):
+    hb = record_pr4["delta_join"]["heartbeat"]
+    assert hb["delta_join_fraction"] >= MIN_DELTA_JOIN_FRACTION, hb
+    assert hb["delta_heartbeat_us"] <= (MAX_DELTA_VS_FULL_JOIN_HEARTBEAT
+                                        * hb["full_heartbeat_us"]), hb
+    assert hb["delta_heartbeat_us"] <= SMOKE_HEARTBEAT_BUDGET_US, hb
+    assert hb["full_heartbeat_us"] <= SMOKE_HEARTBEAT_BUDGET_US, hb
