@@ -1,9 +1,9 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness: one entry per paper figure (Figs. 7-11) plus the
 beyond-paper roofline report, the critical-path record, and the
-incremental-scan / incremental-join records.
+incremental-scan / incremental-join / sharded-reseed records.
 
-    python -m benchmarks.run [--quick]   # figures + BENCH_PR3/4.json
+    python -m benchmarks.run [--quick]   # figures + BENCH_PR3/4/5.json
     python -m benchmarks.run --smoke     # machine-readable records only
                                          # (the CI cycle-time SLA gate)
 
@@ -11,15 +11,20 @@ Every invocation (re)writes the machine-readable perf trajectory:
 ``BENCH_PR3.json`` (per-heartbeat cycle time, host dispatch/staging
 time, the partitioned-vs-block join scaling curve, the pipelined/sync
 cycle-time ratio, and the delta-vs-full-rescan scan curve +
-steady-state heartbeat) and ``BENCH_PR4.json`` (the delta-vs-full JOIN
-probe curve + the index-less steady-state heartbeat).
-``tests/test_sla_gate.py`` fails the build when either record regresses
-past its stored thresholds.
+steady-state heartbeat), ``BENCH_PR4.json`` (the delta-vs-full JOIN
+probe curve + the index-less steady-state heartbeat) and
+``BENCH_PR5.json`` (the sharded reseed beat on a multi-shard row mesh
+vs a single shard — measured in a SUBPROCESS with forced host devices,
+so the single-device records above stay undisturbed).
+``tests/test_sla_gate.py`` fails the build when any record regresses
+past its stored thresholds — including when a record or row goes
+missing.
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -27,6 +32,53 @@ BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           os.pardir, "BENCH_PR3.json")
 BENCH_PR4_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                               os.pardir, "BENCH_PR4.json")
+BENCH_PR5_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              os.pardir, "BENCH_PR5.json")
+
+
+def write_bench_pr5(smoke: bool) -> dict:
+    """Run the sharded bench in a subprocess (it forces the 8-device
+    host platform before jax initializes) and fold the record into
+    ``BENCH_PR5.json``.  A failing subprocess fails the run — the SLA
+    gate must never see a silently missing record."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    if "--xla_force_host_platform_device_count" not in \
+            env.get("XLA_FLAGS", ""):
+        env["XLA_FLAGS"] = " ".join(
+            [env.get("XLA_FLAGS", ""),
+             "--xla_force_host_platform_device_count=8"]).strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), env.get("PYTHONPATH", "")]).rstrip(
+        os.pathsep)
+    cmd = [sys.executable, "-m", "benchmarks.sharded_bench"]
+    if smoke:
+        cmd.append("--smoke")
+    out = subprocess.run(cmd, capture_output=True, text=True, cwd=root,
+                         timeout=3600, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded bench failed:\n{out.stderr[-4000:]}")
+    rec = json.loads(out.stdout)
+    record = {"pr": 5, "mode": "smoke" if smoke else "full",
+              "sharded_reseed": rec["per_device"],
+              "sharded_engine": rec["engine"]}
+    path = os.path.abspath(BENCH_PR5_JSON)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    rs, e = record["sharded_reseed"], record["sharded_engine"]
+    print(f"== Sharded reseed -> {path} ==", flush=True)
+    print(f"per-device reseed scan x{rs['shards']} shards: "
+          f"{rs['shard_scan_us']:.0f}us vs single-shard "
+          f"{rs['full_scan_us']:.0f}us ({rs['speedup']:.2f}x); "
+          f"engine reseed sharded {e['sharded_reseed_us']:.0f}us vs "
+          f"single {e['single_reseed_us']:.0f}us on forced host "
+          f"devices; sharded delta beat {e['delta_heartbeat_us']:.0f}us "
+          f"(delta fraction {e['delta_cycle_fraction']:.2f})",
+          flush=True)
+    return record
 
 
 def _emit(name: str, us: float, derived: str):
@@ -82,6 +134,8 @@ def write_bench_json(smoke: bool) -> dict:
           f"{dj['heartbeat']['full_heartbeat_us']:.0f}us "
           f"(delta-join fraction "
           f"{dj['heartbeat']['delta_join_fraction']:.2f})", flush=True)
+
+    write_bench_pr5(smoke)
     return record
 
 

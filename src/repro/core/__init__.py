@@ -8,6 +8,8 @@ Layers:
   lowering    — plan -> staged operator graph IR (windows, masks, caps)
   backends    — operator backend registry: jnp reference vs Pallas kernels
   executor    — pipelined dispatch/collect heartbeats over the jitted plan
+  sharding    — mesh-aware heartbeats: row-sharded spines/carries,
+                replicated probe sides, shard-local delta beats
   baseline    — query-at-a-time executor ("SystemX" stand-in)
   sla         — bounded-computation / response-time provisioning (§3.5)
 """

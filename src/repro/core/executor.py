@@ -159,20 +159,46 @@ class SharedDBEngine:
                  initial_data: Dict[str, Dict[str, np.ndarray]],
                  jit: bool = True, kernels: str = "auto",
                  pipeline_depth: int = 2, delta_scans: bool = True,
-                 delta_joins: bool = True):
+                 delta_joins: bool = True, mesh=None):
+        """``mesh``: an optional 1-D ``jax.sharding.Mesh`` — the always-on
+        plan then runs SHARDED by spine-row range (core/sharding.py):
+        row-sharded spine tables + carries, replicated join probe sides,
+        shard-local delta beats, all-shard reseed beats, and a host-side
+        cross-shard result merge at collect.  ``mesh=None`` (the default)
+        is the existing single-device path, untouched; a 1-device mesh is
+        bit-identical to it."""
         self.plan = plan
         self.update_slots = update_slots
-        self.state = plan.catalog.init_state(initial_data)
         self._queues: Dict[str, collections.deque] = {
             name: collections.deque() for name in plan.templates}
         self._update_queue: collections.deque = collections.deque()
         self._ticket_ids = itertools.count()
         backend = resolve_backend(kernels)
         self._lowered = lower_plan(plan)
-        cycle = build_cycle(self._lowered, backend)
-        delta = build_delta_cycle(self._lowered, backend)
-        delta_j = build_delta_cycle(self._lowered, backend,
-                                    delta_joins=True)
+        if mesh is not None:
+            from repro.core import sharding
+            spec = sharding.build_shard_spec(plan, mesh)
+            self._shard_spec = spec
+            self.state = sharding.init_sharded_state(spec, initial_data)
+            cycle = sharding.build_sharded_cycle(self._lowered, backend,
+                                                 spec)
+            delta = sharding.build_sharded_delta_cycle(self._lowered,
+                                                       backend, spec)
+            delta_j = sharding.build_sharded_delta_cycle(
+                self._lowered, backend, spec, delta_joins=True)
+            self._merge_results = sharding.build_merge(self._lowered,
+                                                       spec)
+            repl = spec.repl_sharding()
+            self._stage = lambda a: jax.device_put(np.asarray(a), repl)
+        else:
+            self._shard_spec = None
+            self.state = plan.catalog.init_state(initial_data)
+            cycle = build_cycle(self._lowered, backend)
+            delta = build_delta_cycle(self._lowered, backend)
+            delta_j = build_delta_cycle(self._lowered, backend,
+                                        delta_joins=True)
+            self._merge_results = None
+            self._stage = jnp.asarray
         # donate storage: the snapshot rolls forward functionally in
         # place; the delta cycles additionally donate the carried scan
         # words + key partitions (each carry is produced by one heartbeat
@@ -199,7 +225,9 @@ class SharedDBEngine:
         # carried shapes/meanings), e.g. across an elastic re-lower
         self._layout_token = (plan.qcap, plan.n_params_max,
                               tuple(sorted(plan.offsets.items())),
-                              tuple(sorted(plan.caps.items())))
+                              tuple(sorted(plan.caps.items())),
+                              self._shard_spec.n_shards
+                              if self._shard_spec else 0)
         self._carry_token = None
         # (active, params) of the last DISPATCHED heartbeat: the delta
         # path diffs against these to find changed admission slots
@@ -274,8 +302,8 @@ class SharedDBEngine:
                     params[g, pi, 0] = lo
                     params[g, pi, 1] = hi
             admitted[name] = take
-        batch = {"params": jnp.asarray(params),
-                 "active": jnp.asarray(active)}
+        batch = {"params": self._stage(params),
+                 "active": self._stage(active)}
         return batch, admitted
 
     def _admit_updates(self, buf: _StagingBuffers):
@@ -320,7 +348,7 @@ class SharedDBEngine:
         # rows this batch can dirty (delta-path eligibility + accounting)
         touches = {t: f["ins"] + f["upd"] + f["del"]
                    for t, f in fill.items()}
-        return jax.tree.map(jnp.asarray, np_batches), touches
+        return jax.tree.map(self._stage, np_batches), touches
 
     # -------------------------------------------------- incremental scans
     def _diff_admission(self, buf: _StagingBuffers) -> np.ndarray:
@@ -415,7 +443,7 @@ class SharedDBEngine:
                 "different admission layout — reset the carries "
                 f"(carry {self._carry_token} != plan "
                 f"{self._layout_token})")
-            queries = dict(queries, changed=jnp.asarray(changed))
+            queries = dict(queries, changed=self._stage(changed))
             if use_delta_join:
                 self.state, self._carry, results = self._cycle_delta_join(
                     self.state, self._carry, self._rid_carry, queries,
@@ -482,6 +510,11 @@ class SharedDBEngine:
         self._spilled_stats.append(flight)
         results = flight.results
         jax.block_until_ready(results)
+        if self._merge_results is not None:
+            # sharded heartbeat: fold per-shard partials (route/sort
+            # candidates, group partial aggregates) into the final
+            # per-template results — the cross-shard routing pass
+            results = self._merge_results(results)
         self.last_overflow = int(results["_overflow"])
         # full-rescan heartbeats have no delta capacities to violate, so
         # the invariant reads 0 rather than a stale delta-cycle value
@@ -548,6 +581,19 @@ class SharedDBEngine:
         return done
 
     # --------------------------------------------------- host-side fetch
+    def snapshot(self, table: str) -> Dict[str, np.ndarray]:
+        """Host view of a table's columns/validity at the ORIGINAL
+        (unpadded) capacity.  The sharded state keeps columns as flat
+        row-major leaves, so the same read works for the single-device,
+        row-sharded and replicated layouts alike."""
+        schema = self.plan.catalog.schemas[table]
+        t = self.state[table]
+        T = schema.capacity
+        out = {c: np.asarray(t[c])[:T] for c in schema.columns}
+        out["_valid"] = np.asarray(t["_valid"])[:T]
+        out["_n"] = int(t["_n"])
+        return out
+
     def materialize(self, table: str, row_ids: np.ndarray,
                     cols: Optional[List[str]] = None) -> Dict[str, np.ndarray]:
         """Fetch tuples by row id from the current snapshot (result

@@ -69,6 +69,13 @@ the index gather is already cheaper than any merge.
 Per-cycle work remains a static function of table/slot capacities — the
 bounded-computation property (§3.5) — because every shape below is fixed
 at lowering time.
+
+The lowered stage graph is also the input to the MESH-AWARE lowering in
+core/sharding.py: ``build_sharded_cycle`` / ``build_sharded_delta_cycle``
+re-thread the same stages through a ``shard_map`` over a row mesh
+(row-sharded spines and carries, replicated probe sides), reusing this
+module's predicate binding and post-scan verbatim — a 1-shard mesh is
+bit-identical to the cycles built here.
 """
 from __future__ import annotations
 

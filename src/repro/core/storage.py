@@ -237,10 +237,19 @@ def locate_rows_by_key(keys_col, probe, valid):
     return jnp.max(jnp.where(eq, rows[None, :], -1), axis=1)
 
 
-def apply_updates(schema: TableSchema, table: Dict, batch: Dict) -> Dict:
+def apply_updates(schema: TableSchema, table: Dict, batch: Dict,
+                  commit_cap: Optional[int] = None) -> Dict:
     """Deletes, then column updates, then inserts — all in slot order.
 
     Slot order IS arrival order: the executor fills slots FIFO.
+
+    ``commit_cap`` bounds the rows inserts may land in (default: the
+    schema capacity).  The sharded engine stores tables PADDED to a
+    multiple of the shard count (core/sharding.py) but must keep the
+    padding rows permanently invalid, so it applies with the ORIGINAL
+    capacity as the commit bound — insert-overflow semantics then
+    match the unsharded engine exactly (rows past the bound are
+    dropped and never dirty; the append cursor still advances).
 
     Besides committing the batch, this maintains the table's per-cycle
     dirty-row set: ``_dirty_rows`` (int32[schema.dirty_cap], ascending
@@ -290,9 +299,11 @@ def apply_updates(schema: TableSchema, table: Dict, batch: Dict) -> Dict:
                 jnp.where(sel, batch["upd_val"], 0), mode="drop")
 
     # inserts: append at cursor (slot order preserved by arange offset)
-    k = batch["ins_mask"].shape[0]
+    cap_c = schema.capacity if commit_cap is None else commit_cap
     offs = jnp.cumsum(batch["ins_mask"].astype(jnp.int32)) - 1
-    rows = jnp.where(batch["ins_mask"], n + offs, schema.capacity)
+    landing = n + offs
+    rows = jnp.where(batch["ins_mask"] & (landing < cap_c), landing,
+                     schema.capacity)
     for c in schema.columns:
         t[c] = t[c].at[rows].set(batch["ins_rows"][c], mode="drop")
     t["_valid"] = t["_valid"].at[rows].set(True, mode="drop")
@@ -300,15 +311,19 @@ def apply_updates(schema: TableSchema, table: Dict, batch: Dict) -> Dict:
     if schema.indexed:
         keys = jnp.where(batch["ins_mask"], batch["ins_rows"][schema.pk],
                          schema.key_space)
+        # a DROPPED insert (landing past the commit bound) must index as
+        # absent (-1) — a row id >= capacity would later clip onto the
+        # last real row in the gather join and fabricate a match
         t["_pk_index"] = t["_pk_index"].at[keys].set(
-            rows.astype(jnp.int32), mode="drop")
+            jnp.where(batch["ins_mask"] & (landing < cap_c), landing,
+                      -1).astype(jnp.int32), mode="drop")
     t["_n"] = n_new
     t["_version"] = t["_version"] + 1
 
     # dirty-row set: mark the touched rows (deletes, updates, insert
-    # landing rows — rows the table dropped for being over capacity are
-    # NOT dirty) on a row bitmap, then compress to the fixed-capacity
-    # sorted/unique id list the delta scan consumes.
+    # landing rows — rows the table dropped for being over the commit
+    # bound are NOT dirty) on a row bitmap, then compress to the fixed-
+    # capacity sorted/unique id list the delta scan consumes.
     touched.append(jnp.where(
         batch["ins_mask"] & (rows < schema.capacity),
         rows.astype(jnp.int32), -1))

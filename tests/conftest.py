@@ -1,7 +1,40 @@
 import os
 import sys
 
-# smoke tests / benches must see ONE device (the dry-run sets its own flag)
+# smoke tests / benches must see the CPU platform (the dry-run sets its
+# own flag)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Multi-device substrate for the sharding tests: the host-platform
+# device-count flag must be set BEFORE jax initializes, so it lives here
+# rather than in a fixture body.  Appending (not overwriting) keeps any
+# caller-provided XLA_FLAGS, the flag is inert on real accelerator
+# platforms, and subprocess-based tests (test_elastic_relower, the
+# launch dry-runs, the sharded benchmark) overwrite XLA_FLAGS in their
+# own environment — so this is subprocess-safe in both directions.
+_DEVICES_FLAG = "--xla_force_host_platform_device_count"
+if _DEVICES_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = " ".join(
+        [os.environ.get("XLA_FLAGS", ""), f"{_DEVICES_FLAG}=8"]).strip()
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def row_mesh():
+    """Factory for 1-D row meshes over the forced host devices; skips
+    cleanly when the substrate is unavailable (real accelerator
+    platform, or the flag failed to take)."""
+    import jax
+
+    def make(n_shards: int):
+        if jax.default_backend() != "cpu" or jax.device_count() < n_shards:
+            pytest.skip(f"sharding tests need {n_shards} CPU host "
+                        f"devices (have {jax.device_count()} "
+                        f"{jax.default_backend()} devices)")
+        from repro.core.sharding import make_row_mesh
+        return make_row_mesh(n_shards)
+
+    return make

@@ -1,0 +1,503 @@
+"""Sharded-engine differential suite (PR-5 tentpole acceptance).
+
+Ticket-for-ticket parity of ``SharedDBEngine(mesh=...)`` — shard counts
+1/2/4, both operator backends — against the ``QueryAtATimeEngine``
+oracle over the deterministic TPC-W stream, extending the PR-3/4
+stateful harness with a shard count axis.  The index-less world drives
+every carried-join beat class through the sharded data path:
+
+  * carried-rid beats — customer-only updates leave every PK mirror
+    untouched, dirty spine rows merge into the per-shard rid carries;
+  * PK-write fallback beats — item updates rebuild the (replicated)
+    partitions and force the full probe;
+  * a dirty-overflow reseed beat — more touched item rows than
+    ``dirty_cap`` forces the full rescan, re-seeding both carry halves
+    across every shard.
+
+Every heartbeat also checks snapshot parity (the sharded state
+re-assembled by row range equals the oracle's tables column for
+column), and a 1-shard mesh is asserted BIT-identical to the unsharded
+engine — same result arrays in the same order, same scan/join path per
+beat, same snapshots.
+
+When hypothesis is installed, a rule-based machine explores random
+interleavings with the shard count drawn per example (the "shard-count
+rule" on top of the PR-3/4 machines); the deterministic streams below
+always run.  ``REPRO_SHARD_STRESS=1`` (the CI sharded leg) lengthens
+the deterministic stream.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.baseline import QueryAtATimeEngine
+from repro.core.executor import SharedDBEngine
+from repro.workloads import tpcw
+
+try:
+    from hypothesis import settings, strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     rule)
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+SCALE_I, SCALE_C = 64, 128
+INT_MAX = tpcw.INT_MAX
+STRESS = os.environ.get("REPRO_SHARD_STRESS", "") not in ("", "0")
+
+
+def _compare(tag, ticket, want):
+    if "rows" in ticket.result:
+        a = set(int(x) for x in np.asarray(ticket.result["rows"])
+                if x >= 0)
+        b = set(int(x) for x in want["rows"] if x >= 0)
+        assert a == b, (tag, ticket.template, ticket.params,
+                        sorted(a)[:5], sorted(b)[:5])
+    else:
+        np.testing.assert_allclose(
+            np.sort(np.asarray(ticket.result["scores"]).ravel()),
+            np.sort(np.asarray(want["scores"]).ravel()), rtol=1e-6,
+            err_msg=f"{tag}:{ticket.template}")
+
+
+class _ShardedWorld:
+    """One sharded engine + the query-at-a-time oracle, compared
+    ticket-for-ticket and snapshot-for-snapshot every heartbeat (the
+    PR-3/4 ``_World`` pattern with a mesh under the engine)."""
+
+    def __init__(self, mesh, backend: str, dense_pk_index: bool = False):
+        rng = np.random.default_rng(0)
+        self.plan = tpcw.build_tpcw_plan(SCALE_I, SCALE_C,
+                                         dense_pk_index=dense_pk_index)
+        data = tpcw.generate_data(rng, SCALE_I, SCALE_C)
+        self.eng = SharedDBEngine(self.plan, tpcw.DEFAULT_UPDATE_SLOTS,
+                                  data, kernels=backend, mesh=mesh)
+        self.base = QueryAtATimeEngine(self.plan, data, jit=False)
+        self.pending_updates = []
+        self.pending_queries = []
+        self.next_item = SCALE_I
+        self.item_watermark = SCALE_I
+
+    def queue_update(self, update):
+        self.pending_updates.append(update)
+        self.eng.submit_update(*update)
+
+    def insert_item(self, subject, cost):
+        i = self.next_item
+        self.next_item += 1
+        self.queue_update(("item", "insert", {
+            "i_id": i, "i_a_id": i % max(SCALE_I // 4, 1),
+            "i_subject": subject, "i_title": i % tpcw.N_TITLE_TOKENS,
+            "i_pub_date": 11500, "i_cost": cost, "i_srp": cost + 100,
+            "i_stock": 5, "i_related1": 0}))
+
+    def submit(self, name, params):
+        self.pending_queries.append(
+            (name, params, self.eng.submit(name, params)))
+
+    def heartbeat(self, pipelined: bool = False):
+        for u in self.pending_updates:
+            self.base.apply_update(*u)
+        self.pending_updates = []
+        self.eng.run_until_drained(pipelined=pipelined)
+        for name, params, ticket in self.pending_queries:
+            want = self.base.execute(name, params).result
+            assert ticket.result is not None, name
+            _compare("sharded", ticket, want)
+        self.pending_queries = []
+        self.item_watermark = self.next_item
+        for table in ("item", "customer", "order_line"):
+            got = self.eng.snapshot(table)
+            want_t = self.base.state[table]
+            for col in self.plan.catalog.schemas[table].columns:
+                assert (got[col] == np.asarray(want_t[col])).all(), \
+                    (table, col)
+            assert (got["_valid"] == np.asarray(want_t["_valid"])).all(), \
+                table
+
+
+def _drive_deterministic_stream(w: _ShardedWorld):
+    """Seed -> PK-write fallback -> carried-rid beats -> a wide beat
+    (sort/group/route merges) -> dirty-overflow reseed -> recovery."""
+    rng = np.random.default_rng(7)
+    plan = w.plan
+
+    def submit_joins(o_id):
+        # slot-stable join admission (see test_differential_engine):
+        # vary only one template's params so the PK-side admission pane
+        # stays within its contiguous budget
+        w.submit("order_lines", {0: (o_id, o_id)})
+        w.submit("get_cart", {0: (12, 12)})
+        w.submit("get_book", {0: (5, 5)})
+
+    # seed + a PK-side-write beat (partitions rebuild -> full probe)
+    submit_joins(10)
+    w.heartbeat()
+    assert w.eng.last_scan_path == "full"
+    w.queue_update(("item", "update", {
+        "key": int(rng.integers(0, SCALE_I)), "col": "i_cost",
+        "val": int(rng.integers(100, 9999))}))
+    submit_joins(11)
+    w.heartbeat()
+    if w.eng._carried_joins:
+        assert w.eng.last_join_path == "full"
+
+    # carried-rid beats: customer-only updates, join templates active
+    n_carry = 5 if STRESS else 3
+    for beat in range(n_carry):
+        w.queue_update(("customer", "update", {
+            "key": int(rng.integers(0, SCALE_C)),
+            "col": "c_expiration",
+            "val": int(rng.integers(12000, 15000))}))
+        submit_joins(20 + beat)
+        w.heartbeat()
+    if w.eng._carried_joins:
+        assert w.eng.delta_join_cycles >= n_carry - 1
+
+    # wide beat: sort (mirrored spines), group-by and route merges, an
+    # insert landing on the append shard, pipelined drain
+    w.insert_item(3, 999)
+    w.submit("best_sellers", {0: (0, INT_MAX), 1: (4, 4)})
+    w.submit("order_display", {0: (9, 9)})
+    w.submit("get_customer", {0: (5, 5)})
+    w.submit("search_subject", {0: (2, 2)})
+    w.submit("new_products", {0: (3, 3)})
+    w.heartbeat(pipelined=True)
+
+    # dirty-overflow reseed beat: touch more item rows than dirty_cap
+    # holds in ONE cycle (updates + deletes on distinct committed keys)
+    dirty_cap = plan.catalog.schemas["item"].dirty_cap
+    slots = tpcw.DEFAULT_UPDATE_SLOTS
+    n_upd = min(slots.n_update, dirty_cap)
+    for k in range(n_upd):
+        w.queue_update(("item", "update",
+                        {"key": k, "col": "i_stock", "val": 1}))
+    for k in range(n_upd, dirty_cap + 1):
+        w.queue_update(("item", "delete", {"key": k}))
+    submit_joins(30)
+    w.heartbeat()
+    assert w.eng.last_scan_path == "full"
+    assert w.eng.last_delta_overflow == 0
+
+    # recovery: the reseed re-seeded both carry halves on every shard
+    w.queue_update(("customer", "update",
+                    {"key": 1, "col": "c_expiration", "val": 14999}))
+    submit_joins(31)
+    w.heartbeat()
+    if w.eng._carried_joins:
+        assert w.eng.last_join_path == "delta"
+
+
+@pytest.mark.parametrize("shards,backend", [
+    (1, "jnp"), (2, "jnp"), (4, "jnp"),
+    (1, "pallas"), (2, "pallas"), (4, "pallas")])
+def test_sharded_differential_indexless_stream(row_mesh, shards, backend):
+    """Ticket-for-ticket + snapshot parity vs the oracle over the
+    deterministic index-less stream: every join on a carried access
+    path, every beat class (carried / PK-write fallback / overflow
+    reseed) exercised at this shard count and backend."""
+    w = _ShardedWorld(row_mesh(shards), backend,
+                      dense_pk_index=False)
+    _drive_deterministic_stream(w)
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_sharded_differential_indexed_world(row_mesh, shards):
+    """The dense-pk-index world (every join an O(1) gather): sharded
+    spines still merge exactly against the oracle."""
+    w = _ShardedWorld(row_mesh(shards), "jnp",
+                      dense_pk_index=True)
+    rng = np.random.default_rng(5)
+    for beat in range(4 if STRESS else 3):
+        w.queue_update(("customer", "update", {
+            "key": int(rng.integers(0, SCALE_C)),
+            "col": "c_expiration",
+            "val": int(rng.integers(12000, 15000))}))
+        # slot-stable admission on the wide item window (varying several
+        # item-referencing templates at once would span more words than
+        # the contiguous admission pane and legitimately force full
+        # rescans); only get_customer's parameter varies — its changed
+        # word stays inside the customer stage's own pane
+        w.submit("admin_item", {0: (3, 3)})
+        w.submit("get_customer",
+                 {0: (int(rng.integers(0, SCALE_C)),) * 2})
+        w.submit("order_lines", {0: (7, 7)})
+        w.heartbeat()
+    assert w.eng.delta_cycles >= 1
+
+
+def test_mesh1_bit_identical_to_unsharded_engine(row_mesh):
+    """Acceptance: at mesh size 1 the sharded engine reproduces the
+    current engine BIT for bit — identical result arrays (order
+    included), identical per-beat scan/join paths, identical snapshots
+    — across full, delta, carried-join, insert and delete beats in
+    both the indexed and index-less worlds."""
+    mesh = row_mesh(1)
+    for dense in (True, False):
+        rng = np.random.default_rng(0)
+        plan = tpcw.build_tpcw_plan(SCALE_I, SCALE_C,
+                                    dense_pk_index=dense)
+        data = tpcw.generate_data(rng, SCALE_I, SCALE_C)
+        ref = SharedDBEngine(plan, tpcw.DEFAULT_UPDATE_SLOTS, data,
+                             kernels="jnp")
+        eng = SharedDBEngine(plan, tpcw.DEFAULT_UPDATE_SLOTS, data,
+                             kernels="jnp", mesh=mesh)
+        subs = [("admin_item", {0: (3, 3)}),
+                ("get_customer", {0: (5, 5)}),
+                ("search_subject", {0: (2, 2)}),
+                ("order_lines", {0: (7, 7)}),
+                ("get_cart", {0: (12, 12)}),
+                ("best_sellers", {0: (0, INT_MAX), 1: (4, 4)}),
+                ("order_display", {0: (9, 9)}),
+                ("new_products", {0: (3, 3)})]
+        for beat in range(4):
+            if beat == 1:
+                for e in (ref, eng):
+                    e.submit_update("customer", "update",
+                                    {"key": 2, "col": "c_expiration",
+                                     "val": 14999})
+            if beat == 2:
+                for e in (ref, eng):
+                    e.submit_update("item", "update",
+                                    {"key": 5, "col": "i_cost",
+                                     "val": 1234})
+                    e.submit_update("item", "insert", {
+                        "i_id": SCALE_I + 1, "i_a_id": 1,
+                        "i_subject": 2, "i_title": 3,
+                        "i_pub_date": 11500, "i_cost": 500,
+                        "i_srp": 600, "i_stock": 5, "i_related1": 0})
+                    e.submit_update("customer", "delete", {"key": 7})
+            t_ref = {n: ref.submit(n, p) for n, p in subs}
+            t_eng = {n: eng.submit(n, p) for n, p in subs}
+            ref.run_until_drained()
+            eng.run_until_drained()
+            assert ref.last_scan_path == eng.last_scan_path
+            assert ref.last_join_path == eng.last_join_path
+            for n, _ in subs:
+                rw, gw = t_ref[n].result, t_eng[n].result
+                for k in rw:
+                    a, b = np.asarray(rw[k]), np.asarray(gw[k])
+                    assert a.shape == b.shape and (a == b).all(), \
+                        (dense, beat, n, k)
+            for tname in plan.catalog.schemas:
+                s_r, s_e = ref.snapshot(tname), eng.snapshot(tname)
+                for c in s_r:
+                    assert (np.asarray(s_r[c])
+                            == np.asarray(s_e[c])).all(), \
+                        (dense, beat, tname, c)
+
+
+def test_sharded_sort_merge_exact_on_sharded_spine(row_mesh):
+    """A sort stage whose spine is row-sharded (impossible in TPC-W,
+    where every sort spine doubles as a join probe side): duplicate
+    sort keys spread across shards must merge in EXACT global order —
+    key ties resolve by shard then local row, which is global row
+    order, matching the unsharded stable sort."""
+    from repro.core.plan import Pred, QueryTemplate, compile_plan
+    from repro.core.storage import Catalog, TableSchema, UpdateSlots
+
+    mesh = row_mesh(4)
+    T = 64
+    cat = Catalog([TableSchema("t", ("k", "g", "v"), T, pk="k")])
+    tpl = [QueryTemplate("q", "t", preds=(Pred("t", "g"),),
+                         sort_col="v", limit=10),
+           QueryTemplate("qd", "t", preds=(Pred("t", "g"),),
+                         sort_col="v", sort_desc=True, limit=10)]
+    plan = compile_plan(cat, tpl, {"q": 8, "qd": 8}, max_results=16)
+    rng = np.random.default_rng(1)
+    data = {"t": {"k": np.arange(T), "g": rng.integers(0, 3, T),
+                  "v": rng.integers(0, 4, T)}}   # heavy key duplication
+    eng = SharedDBEngine(plan, UpdateSlots(4, 4, 4), data,
+                         kernels="jnp", mesh=mesh)
+    base = QueryAtATimeEngine(plan, data, jit=False)
+    for g in (0, 1, 2):
+        ta = eng.submit("q", {0: (g, g)})
+        tb = eng.submit("qd", {0: (g, g)})
+        eng.run_until_drained()
+        for name, t in (("q", ta), ("qd", tb)):
+            want = base.execute(name, {0: (g, g)}).result["rows"]
+            got = np.asarray(t.result["rows"])
+            assert (got == np.asarray(want)).all(), \
+                (name, g, got, np.asarray(want))
+
+
+def test_sharded_key_mirror_tracks_pk_rewrites_and_batch_order(row_mesh):
+    """The replicated (key, valid) locate mirror of an index-less
+    row-sharded PK table must track pk-COLUMN rewrites (the mirror is a
+    copy of the column, and updates may rewrite the column itself) and
+    honor the delete-then-update arrival order within one batch — both
+    invisible to the TPC-W streams, both load-bearing for update
+    targeting."""
+    from repro.core.plan import Pred, QueryTemplate, compile_plan
+    from repro.core.storage import Catalog, TableSchema, UpdateSlots
+
+    mesh = row_mesh(2)
+    T = 16
+    cat = Catalog([TableSchema("t", ("k", "v"), T, pk="k")])
+    tpl = [QueryTemplate("byk", "t", preds=(Pred("t", "k"),), limit=4)]
+    plan = compile_plan(cat, tpl, {"byk": 8}, max_results=8)
+    data = {"t": {"k": np.arange(T) * 10, "v": np.arange(T)}}
+    eng = SharedDBEngine(plan, UpdateSlots(4, 4, 4), data,
+                         kernels="jnp", mesh=mesh)
+    base = QueryAtATimeEngine(plan, data, jit=False)
+
+    def beat(updates, q_key):
+        for u in updates:
+            eng.submit_update(*u)
+            base.apply_update(*u)
+        t = eng.submit("byk", {0: (q_key, q_key)})
+        eng.run_until_drained()
+        want = base.execute("byk", {0: (q_key, q_key)}).result["rows"]
+        got = np.asarray(t.result["rows"])
+        assert (got == np.asarray(want)).all(), (q_key, got, want)
+        snap = eng.snapshot("t")
+        for c in ("k", "v"):
+            assert (snap[c] == np.asarray(base.state["t"][c])).all(), c
+        assert (snap["_valid"]
+                == np.asarray(base.state["t"]["_valid"])).all()
+
+    # rewrite row 3's pk 30 -> 77, then target it by the NEW key
+    beat([("t", "update", {"key": 30, "col": "k", "val": 77})], 77)
+    beat([("t", "update", {"key": 77, "col": "v", "val": 999})], 77)
+    # delete-then-update of the same key in ONE batch: the update must
+    # find nothing (arrival order), on whichever shard owned the row
+    beat([("t", "delete", {"key": 50}),
+          ("t", "update", {"key": 50, "col": "v", "val": 123})], 50)
+    # and the key is re-insertable afterwards
+    beat([("t", "insert", {"k": 50, "v": 5})], 50)
+
+
+def test_insert_overflow_never_lands_in_alignment_padding(row_mesh):
+    """A capacity NOT divisible by the shard count pads the sharded
+    layout with alignment rows — inserts overflowing the ORIGINAL
+    capacity must be dropped exactly like the unsharded engine drops
+    them, never committed into the padding (which results/materialize
+    would then expose as phantom rows)."""
+    from repro.core.plan import Pred, QueryTemplate, compile_plan
+    from repro.core.storage import Catalog, TableSchema, UpdateSlots
+
+    mesh = row_mesh(4)
+    T = 10                                  # ceil(10/4)*4 = 12: 2 pads
+    cat = Catalog([TableSchema("t", ("k", "v"), T, pk="k")])
+    tpl = [QueryTemplate("byv", "t", preds=(Pred("t", "v"),), limit=T)]
+    plan = compile_plan(cat, tpl, {"byv": 8}, max_results=16)
+    data = {"t": {"k": np.arange(8) * 10, "v": np.zeros(8, np.int64)}}
+    eng = SharedDBEngine(plan, UpdateSlots(4, 4, 4), data,
+                         kernels="jnp", mesh=mesh)
+    base = QueryAtATimeEngine(plan, data, jit=False)
+    # 4 inserts: rows 8, 9 fit; 10, 11 overflow the ORIGINAL capacity
+    # (but WOULD fit the 12-row padded layout)
+    for i in range(4):
+        u = ("t", "insert", {"k": 100 + i, "v": 0})
+        eng.submit_update(*u)
+        base.apply_update(*u)
+    t = eng.submit("byv", {0: (0, 0)})
+    eng.run_until_drained()
+    want = base.execute("byv", {0: (0, 0)}).result["rows"]
+    got = np.asarray(t.result["rows"])
+    assert (got == np.asarray(want)).all(), (got, want)
+    assert got[got >= 0].max() <= T - 1     # no phantom padding rows
+    snap = eng.snapshot("t")
+    for c in ("k", "v"):
+        assert (snap[c] == np.asarray(base.state["t"][c])).all(), c
+    assert (snap["_valid"] == np.asarray(base.state["t"]["_valid"])).all()
+    # the padding rows themselves stayed permanently invalid
+    assert not np.asarray(eng.state["t"]["_valid"])[T:].any()
+
+
+def test_overflow_insert_indexes_as_absent():
+    """An insert dropped for landing past the commit bound must leave
+    its key ABSENT from the dense pk index (-1) — an out-of-range row
+    id there would clip onto the last real row in the gather join and
+    fabricate a match.  (Storage-level contract shared by the unsharded
+    and sharded apply paths.)"""
+    from repro.core.storage import (TableSchema, UpdateSlots,
+                                    apply_updates, bulk_load,
+                                    empty_update_batch)
+
+    schema = TableSchema("t", ("k", "v"), 4, pk="k", key_space=100)
+    t = bulk_load(schema, {"k": np.arange(4), "v": np.arange(4)})
+    b = empty_update_batch(schema, UpdateSlots(2, 1, 1))
+    b["ins_rows"]["k"] = b["ins_rows"]["k"].at[0].set(7)
+    b["ins_mask"] = b["ins_mask"].at[0].set(True)
+    t2 = apply_updates(schema, t, b)                  # table is full
+    assert int(t2["_pk_index"][7]) == -1              # key absent
+    assert int(t2["_n"]) == 5                         # cursor advances
+    assert not bool(t2["_valid"][3] != t["_valid"][3])
+
+
+def test_sharded_pipelined_drain_matches_oracle(row_mesh):
+    """Double-buffered dispatch/collect over the mesh: staging is
+    replicated per-slot and the donated carries never alias in-flight
+    results."""
+    w = _ShardedWorld(row_mesh(2), "jnp",
+                      dense_pk_index=False)
+    rng = np.random.default_rng(9)
+    for beat in range(3):
+        w.queue_update(("customer", "update", {
+            "key": int(rng.integers(0, SCALE_C)),
+            "col": "c_expiration", "val": 13000 + beat}))
+        w.submit("get_book", {0: (beat, beat)})
+        w.submit("get_customer", {0: (beat, beat)})
+        w.heartbeat(pipelined=True)
+
+
+if HAVE_HYPOTHESIS:
+    class ShardedDifferentialMachine(RuleBasedStateMachine):
+        """The PR-3/4 stateful harness with a SHARD-COUNT rule: each
+        example draws a mesh size (1/2/4) at initialize time, then
+        interleaves spine-side mutations, PK-side mutations and
+        slot-stable join beats over the index-less world, comparing
+        every heartbeat against the oracle."""
+
+        @initialize(shards=st.sampled_from([1, 2, 4]))
+        def setup(self, shards):
+            import jax
+            if jax.default_backend() != "cpu" \
+                    or jax.device_count() < shards:
+                pytest.skip(f"needs {shards} CPU host devices")
+            from repro.core.sharding import make_row_mesh
+            self.w = _ShardedWorld(make_row_mesh(shards), "jnp",
+                                   dense_pk_index=False)
+
+        @rule(key=st.integers(0, SCALE_C - 1),
+              val=st.integers(12000, 15000))
+        def update_customer_expiration(self, key, val):
+            self.w.queue_update(("customer", "update", {
+                "key": key, "col": "c_expiration", "val": val}))
+
+        @rule(key=st.integers(0, SCALE_I - 1), val=st.integers(0, 9999))
+        def update_item_cost(self, key, val):
+            self.w.queue_update(("item", "update", {
+                "key": key, "col": "i_cost", "val": val}))
+
+        @rule(subj=st.integers(0, tpcw.N_SUBJECTS - 1),
+              cost=st.integers(100, 9999))
+        def insert_item(self, subj, cost):
+            self.w.insert_item(subj, cost)
+
+        @rule(o=st.integers(0, 40))
+        def joins_beat(self, o):
+            self.w.submit("order_lines", {0: (o, o)})
+            self.w.submit("get_cart", {0: (12, 12)})
+            self.w.submit("get_book", {0: (5, 5)})
+            self.w.heartbeat()
+
+        @rule(c=st.integers(0, SCALE_C + 8))
+        def select_customer(self, c):
+            self.w.submit("get_customer", {0: (c, c)})
+
+        @rule()
+        def heartbeat(self):
+            self.w.heartbeat()
+
+        def teardown(self):
+            if hasattr(self, "w"):
+                self.w.heartbeat()
+
+    ShardedDifferentialMachine.TestCase.settings = settings(
+        max_examples=2 if STRESS else 1, stateful_step_count=6,
+        deadline=None)
+    TestShardedDifferential = ShardedDifferentialMachine.TestCase

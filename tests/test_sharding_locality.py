@@ -1,0 +1,203 @@
+"""Collective-locality proofs for the sharded heartbeat (PR-5).
+
+The sharding contract (core/sharding.py) is that a DELTA beat is
+entirely shard-local — dirty rows route to their owning shard, panes
+and carried rids refresh without communication — while a full/reseed
+beat scatters the rescan across every shard exactly once and
+re-assembles the replicated probe-side words with one all_gather per
+mirrored predicated stage.  These tests prove it structurally, on three
+independent surfaces:
+
+  * the JAXPR of both delta-cycle flavours contains NO collective
+    primitive (and the full cycle contains exactly one ``all_gather``
+    per mirrored predicated scan stage, over that stage's per-shard
+    row slice);
+  * the OPTIMIZED multi-device HLO of the compiled delta beat contains
+    no collective instruction at all (so GSPMD didn't sneak one in
+    either), while the compiled reseed contains the all-gathers;
+  * a recording backend run through the real engine shows the reseed's
+    compare kernel executing at per-shard width (every shard rescans
+    its own rows exactly once) and the steady-state delta beat never
+    invoking the full-window compare.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.core as jcore
+import jax.numpy as jnp
+
+from repro.core import backends
+from repro.core.executor import SharedDBEngine
+from repro.core.lowering import lower_plan
+from repro.core.storage import empty_update_batch
+from repro.workloads import tpcw
+
+SCALE_I, SCALE_C = 64, 128
+
+COLLECTIVES = {"all_gather", "psum", "ppermute", "all_to_all", "pgather",
+               "reduce_scatter", "pmax", "pmin", "pargmax", "pargmin",
+               "pbroadcast"}
+HLO_COLLECTIVES = ("all-reduce", "all-gather", "collective-permute",
+                   "all-to-all", "reduce-scatter", "collective-broadcast")
+
+
+def _walk_eqns(closed):
+    """Yield every eqn in a closed jaxpr, recursing into sub-jaxprs
+    (shard_map / scan / cond / pallas_call bodies)."""
+    def walk(jx):
+        for e in jx.eqns:
+            yield e
+            for v in e.params.values():
+                vs = v if isinstance(v, (list, tuple)) else (v,)
+                for w in vs:
+                    if isinstance(w, jcore.ClosedJaxpr):
+                        yield from walk(w.jaxpr)
+                    elif isinstance(w, jcore.Jaxpr):
+                        yield from walk(w)
+    yield from walk(closed.jaxpr)
+
+
+def _collectives(closed):
+    return {e.primitive.name for e in _walk_eqns(closed)} & COLLECTIVES
+
+
+@pytest.fixture(scope="module")
+def sharded_cycles():
+    """spec + the three cycle flavours + concrete args at 4 shards over
+    the index-less TPC-W plan (every join on a carried access path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.sharding import (build_shard_spec, build_sharded_cycle,
+                                     build_sharded_delta_cycle,
+                                     init_sharded_state, make_row_mesh)
+
+    if jax.default_backend() != "cpu" or jax.device_count() < 4:
+        pytest.skip("needs 4 CPU host devices")
+    rng = np.random.default_rng(0)
+    plan = tpcw.build_tpcw_plan(SCALE_I, SCALE_C, dense_pk_index=False)
+    data = tpcw.generate_data(rng, SCALE_I, SCALE_C)
+    mesh = make_row_mesh(4)
+    spec = build_shard_spec(plan, mesh)
+    lowered = lower_plan(plan)
+    be = backends.get_backend("jnp")
+    full = build_sharded_cycle(lowered, be, spec)
+    delta = build_sharded_delta_cycle(lowered, be, spec)
+    delta_j = build_sharded_delta_cycle(lowered, be, spec,
+                                        delta_joins=True)
+    state = init_sharded_state(spec, data)
+    put = lambda a: jax.device_put(a, NamedSharding(mesh, P()))  # noqa
+    queries = {"params": put(np.zeros((plan.qcap, plan.n_params_max, 2),
+                                      np.int32)),
+               "active": put(np.zeros((plan.qcap,), bool))}
+    updates = {t: jax.tree.map(put, empty_update_batch(
+        s, tpcw.DEFAULT_UPDATE_SLOTS, xp=np))
+        for t, s in plan.catalog.schemas.items()}
+    state2, carry, results = jax.jit(full)(state, queries, updates)
+    queries_d = dict(queries, changed=put(np.zeros((plan.qcap,), bool)))
+    return {"plan": plan, "spec": spec, "lowered": lowered, "full": full,
+            "delta": delta, "delta_j": delta_j,
+            "args_full": (state, queries, updates),
+            "args_delta": (state2, carry, queries_d, updates),
+            "args_delta_j": (state2, carry, results["_join_rids"],
+                             queries_d, updates)}
+
+
+def test_delta_beat_executes_no_cross_shard_collective(sharded_cycles):
+    """Both delta flavours — shard-local by construction: no collective
+    primitive anywhere in the traced beat, and none in the compiled
+    4-device HLO (GSPMD added none behind our back)."""
+    c = sharded_cycles
+    jd = jax.make_jaxpr(c["delta"])(*c["args_delta"])
+    jdj = jax.make_jaxpr(c["delta_j"])(*c["args_delta_j"])
+    assert _collectives(jd) == set(), _collectives(jd)
+    assert _collectives(jdj) == set(), _collectives(jdj)
+    hlo = jax.jit(c["delta_j"]).lower(
+        *c["args_delta_j"]).compile().as_text()
+    hits = [t for t in HLO_COLLECTIVES if t in hlo]
+    assert hits == [], hits
+
+
+def test_reseed_beat_allgathers_each_mirrored_stage_exactly_once(
+        sharded_cycles):
+    """The full/reseed beat's only collective is ONE all_gather per
+    mirrored predicated scan stage, and each gathers that stage's
+    per-shard row slice — i.e. the rescan touched every shard exactly
+    once before re-assembly."""
+    c = sharded_cycles
+    spec, lowered = c["spec"], c["lowered"]
+    jf = jax.make_jaxpr(c["full"])(*c["args_full"])
+    assert _collectives(jf) == {"all_gather"}
+    gathers = [e for e in _walk_eqns(jf)
+               if e.primitive.name == "all_gather"]
+    mi_pred = [st for st in lowered.scans
+               if spec.is_mirrored(st.table) and st.cols]
+    assert len(gathers) == len(mi_pred) > 0
+    got = sorted(e.invars[0].aval.shape for e in gathers)
+    want = sorted((spec.shard_rows[st.table], st.whi - st.wlo)
+                  for st in mi_pred)
+    assert got == want, (got, want)
+    hlo = jax.jit(c["full"]).lower(*c["args_full"]).compile().as_text()
+    assert "all-gather" in hlo
+
+
+def _recording_backend(record):
+    """jnp backend recording every compare-kernel invocation's
+    (rows, query-width) — trace-time, so it pairs with jit engines whose
+    cycles trace exactly once per flavour."""
+    base = backends.get_backend("jnp")
+
+    def scan(cols, lo, hi, valid):
+        record.append((int(cols.shape[1]), int(lo.shape[1])))
+        return base.scan(cols, lo, hi, valid)
+
+    backends.register_backend(backends.OperatorBackend(
+        name="recording-sharded", scan=scan, join_block=base.join_block,
+        join_partitioned=base.join_partitioned, groupby=base.groupby,
+        scan_delta=base.scan_delta, join_delta=base.join_delta))
+    return "recording-sharded"
+
+
+def test_reseed_rescans_per_shard_and_delta_skips_full_compare(row_mesh):
+    """Engine-level recording proof, 4 shards: the seeding full beat's
+    compare kernels all run at PER-SHARD row width (the rescan is
+    spread over the shards — each scans its own range once), and the
+    steady-state delta beat never invokes the full-window compare at
+    the big item stage — only its admission pane."""
+    mesh = row_mesh(4)
+    rng = np.random.default_rng(3)
+    plan = tpcw.build_tpcw_plan(SCALE_I, SCALE_C)
+    data = tpcw.generate_data(rng, SCALE_I, SCALE_C)
+    record = []
+    name = _recording_backend(record)
+    eng = SharedDBEngine(plan, tpcw.DEFAULT_UPDATE_SLOTS, data,
+                         kernels=name, mesh=mesh)
+    spec = eng._shard_spec
+    lowered = lower_plan(plan)
+    item_st = next(s for s in lowered.scans if s.table == "item")
+    full_width = item_st.q_window
+    pane_width = 32 * item_st.delta_words
+    assert pane_width < full_width
+
+    eng.submit("admin_item", {0: (1, 1)})
+    eng.run_until_drained()                  # traces + runs the reseed
+    assert eng.last_scan_path == "full"
+    shard_widths = {spec.shard_rows[st.table] for st in lowered.scans
+                    if st.cols}
+    rows_seen = {r for r, _ in record}
+    assert rows_seen == shard_widths, (rows_seen, shard_widths)
+    # the item stage's full-width compare ran at its SHARD row count
+    assert (spec.shard_rows["item"], full_width) in record
+
+    record.clear()
+    for i in range(3):
+        eng.submit_update("customer", "update",
+                          {"key": 2 + i, "col": "c_expiration",
+                           "val": 14000 + i})
+        eng.submit("admin_item", {0: (1, 1)})
+        eng.run_until_drained()
+        assert eng.last_scan_path == "delta"
+    # the delta beat's compares are panes only — never the full window
+    assert record, "delta trace recorded no compare at all?"
+    assert all(q < full_width for _, q in record), record
+    assert (spec.shard_rows["item"], pane_width) in record \
+        or (spec.padded["item"], pane_width) in record
