@@ -15,7 +15,11 @@ steady-state heartbeat), ``BENCH_PR4.json`` (the delta-vs-full JOIN
 probe curve + the index-less steady-state heartbeat) and
 ``BENCH_PR5.json`` (the sharded reseed beat on a multi-shard row mesh
 vs a single shard — measured in a SUBPROCESS with forced host devices,
-so the single-device records above stay undisturbed).
+so the single-device records above stay undisturbed) and
+``BENCH_PR6.json`` (the fused delta-heartbeat record: fused vs chained
+steady-state beat with per-phase wall breakdown + launch counts, the
+analytic fused-beat roofline footprint, and the end-to-end
+sharded/single delta-beat ratio).
 ``tests/test_sla_gate.py`` fails the build when any record regresses
 past its stored thresholds — including when a record or row goes
 missing.
@@ -34,6 +38,48 @@ BENCH_PR4_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                               os.pardir, "BENCH_PR4.json")
 BENCH_PR5_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                               os.pardir, "BENCH_PR5.json")
+BENCH_PR6_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              os.pardir, "BENCH_PR6.json")
+
+
+def write_bench_pr6(smoke: bool, pr5_record: dict) -> dict:
+    """The fused delta-heartbeat record: fused vs chained steady-state
+    beat (single device, in-process like the PR-3/4 records) with the
+    per-phase wall breakdown, per-beat backend-op launch counts and the
+    analytic roofline footprint of one fused beat — plus the end-to-end
+    sharded/single delta-beat ratio lifted from the PR-5 subprocess
+    record (same forced-host mesh, so the ratio is apples-to-apples)."""
+    from benchmarks import fused_bench
+    e = pr5_record["sharded_engine"]
+    record = {"pr": 6, "mode": "smoke" if smoke else "full",
+              "fused": fused_bench.run(smoke=smoke),
+              "sharded_delta": {
+                  "shards": e["shards"],
+                  "sharded_delta_heartbeat_us": e["delta_heartbeat_us"],
+                  "single_delta_heartbeat_us":
+                      e["single_delta_heartbeat_us"],
+                  "ratio": e["sharded_delta_ratio"]}}
+    path = os.path.abspath(BENCH_PR6_JSON)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    fu = record["fused"]
+    print(f"== Fused delta heartbeat -> {path} ==", flush=True)
+    print(f"fused {fu['fused']['wall_us']:.0f}us vs chained "
+          f"{fu['chained']['wall_us']:.0f}us per delta beat "
+          f"(ratio {fu['fused_vs_chained']:.3f}; fused launches "
+          f"{fu['fused_launches']} vs chained "
+          f"{fu['chained_launches']}); phase breakdown fused "
+          f"stage/dispatch/kernel/collect = "
+          f"{fu['fused']['stage_us']:.0f}/"
+          f"{fu['fused']['dispatch_us']:.0f}/"
+          f"{fu['fused']['kernel_us']:.0f}/"
+          f"{fu['fused']['collect_us']:.0f}us; delta phase fused "
+          f"{fu['delta_phase']['fused_us']:.0f}us vs chained "
+          f"{fu['delta_phase']['chained_us']:.0f}us "
+          f"({fu['delta_phase']['speedup']:.2f}x); sharded/single delta "
+          f"ratio {record['sharded_delta']['ratio']:.2f}", flush=True)
+    return record
 
 
 def write_bench_pr5(smoke: bool) -> dict:
@@ -135,7 +181,8 @@ def write_bench_json(smoke: bool) -> dict:
           f"(delta-join fraction "
           f"{dj['heartbeat']['delta_join_fraction']:.2f})", flush=True)
 
-    write_bench_pr5(smoke)
+    record5 = write_bench_pr5(smoke)
+    write_bench_pr6(smoke, record5)
     return record
 
 

@@ -137,33 +137,50 @@ def engine_beats(scale_items: int = SCALE_ITEMS, shards: int = SHARDS,
             assert all(d.scan_path == "full" for d in done)
             walls[label].extend(d.wall_s for d in done)
 
-    # steady-state delta beats on the sharded mesh
-    eng = SharedDBEngine(plan, tpcw.DEFAULT_UPDATE_SLOTS, data,
-                         mesh=make_row_mesh(shards))
-    eng.submit("get_book", {0: (1, 1)})
-    eng.run_until_drained()                               # seed (full)
-    for i in range(2):                                    # compile delta
-        eng.submit_update("customer", "update",
-                          {"key": 1, "col": "c_expiration",
-                           "val": 13000 + i})
+    # steady-state delta beats: the SAME trickle stream on the sharded
+    # mesh and on a single device, so the end-to-end sharded/single
+    # delta-beat ratio is apples-to-apples inside this one forced-host
+    # subprocess.  With the PR-6 on-device cross-shard merge, collect()
+    # no longer pays a host-side key-merge, so the ratio measures
+    # shard_map dispatch overhead (bounded by the SLA gate) rather than
+    # a host merge that grows with the result surface.
+    def delta_walls(mesh):
+        drng = np.random.default_rng(13)
+        eng = SharedDBEngine(plan, tpcw.DEFAULT_UPDATE_SLOTS, data,
+                             mesh=mesh)
         eng.submit("get_book", {0: (1, 1)})
-        eng.run_until_drained()
-    dwalls = []
-    for i in range(beats):
-        k = int(rng.integers(0, scale_items))
-        c = int(rng.integers(0, 2880))
-        eng.submit("get_book", {0: (k, k)})
-        eng.submit_update("customer", "update",
-                          {"key": c, "col": "c_expiration",
-                           "val": 14000 + i})
-        dwalls.extend(d.wall_s
-                      for d in eng.run_until_drained(max_cycles=4))
+        eng.run_until_drained()                           # seed (full)
+        for i in range(2):                                # compile delta
+            eng.submit_update("customer", "update",
+                              {"key": 1, "col": "c_expiration",
+                               "val": 13000 + i})
+            eng.submit("get_book", {0: (1, 1)})
+            eng.run_until_drained()
+        dwalls = []
+        for i in range(beats):
+            k = int(drng.integers(0, scale_items))
+            c = int(drng.integers(0, 2880))
+            eng.submit("get_book", {0: (k, k)})
+            eng.submit_update("customer", "update",
+                              {"key": c, "col": "c_expiration",
+                               "val": 14000 + i})
+            dwalls.extend(d.wall_s
+                          for d in eng.run_until_drained(max_cycles=4))
+        return eng, dwalls
+
+    eng, dwalls = delta_walls(make_row_mesh(shards))
+    _, dwalls_single = delta_walls(None)
     total = max(eng.delta_cycles + eng.full_cycles, 1)
+    sharded_delta_us = float(np.mean(dwalls)) * 1e6
+    single_delta_us = float(np.mean(dwalls_single)) * 1e6
     return {"scale_items": scale_items, "shards": shards,
             "beats": beats, "devices_forced": True,
             "single_reseed_us": float(np.mean(walls["single"])) * 1e6,
             "sharded_reseed_us": float(np.mean(walls["sharded"])) * 1e6,
-            "delta_heartbeat_us": float(np.mean(dwalls)) * 1e6,
+            "delta_heartbeat_us": sharded_delta_us,
+            "single_delta_heartbeat_us": single_delta_us,
+            "sharded_delta_ratio": sharded_delta_us
+            / max(single_delta_us, 1e-9),
             "delta_cycle_fraction": eng.delta_cycles / total,
             "delta_join_fraction": eng.delta_join_cycles
             / max(eng.delta_join_cycles + eng.full_join_cycles, 1)}

@@ -21,6 +21,13 @@ Backend surface (the shared-operator hot loops):
   join_delta(kl, rows, bkeys, brows,
              bounds)                        -> rid int32[D]   (dirty probe)
   groupby(codes, vals, mask, n_groups)      -> (count, sum)
+  fused_delta(scan_in, join_in)             -> (words, rids)  (OPTIONAL —
+      the whole delta beat in ONE op: every predicated stage's admission
+      pane + dirty-row rescan merged into its carried words, every
+      carried join's dirty-spine-row probe merged into its carried rid
+      array.  ``scan_in``/``join_in`` are tuples of FusedScanIn /
+      FusedJoinIn below.  A backend that leaves this None falls back to
+      the chained scan/scan_delta/join_delta ops in build_delta_cycle.)
 
 Everything else in the cycle — the dense PK-index gather join, union
 compression, argsort and result routing — lowers directly to XLA
@@ -36,9 +43,50 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
+
+
+class FusedScanIn(NamedTuple):
+    """One predicated scan stage's inputs to the fused delta op.
+
+    The lowering computes the pane window host-free (``_pane_window``)
+    and pre-slices the pane predicate matrix, so the op itself never
+    re-derives admission state.  ``rows`` is the stage table's sorted
+    distinct dirty-row set padded with the capacity sentinel (==
+    ``cols.shape[1]``), ``dn`` its live count — the op may use ``dn``
+    (and ``span``) to skip no-op phases, which is exact because a
+    zero-span pane recompute and an all-sentinel scatter are both
+    identities on the carried words.
+    """
+    cols: object          # int32[C, T] predicated columns
+    lo: object            # int32[C, Q] full-window predicate lows
+    hi: object            # int32[C, Q] full-window predicate highs
+    lo_p: object          # int32[C, 32*A] pane slice of lo at w0
+    hi_p: object          # int32[C, 32*A] pane slice of hi at w0
+    valid: object         # bool[T]
+    carry: object         # uint32[T, w] previous heartbeat's words
+    w0: object            # int32 scalar: pane's first word column
+    span: object          # int32 scalar: changed-word span (0 = none)
+    rows: object          # int32[D] dirty rows (sentinel == T pads)
+    dn: object            # int32 scalar: live dirty-row count
+
+
+class FusedJoinIn(NamedTuple):
+    """One carried (non-gather) join's inputs to the fused delta op.
+
+    Block-kind joins arrive as single-bucket pseudo-partitions (the
+    whole PK side is one pane with bound INT_MIN), so every carried join
+    probes through the same one-bucket-per-dirty-row path.
+    """
+    keys: object          # int32[Tl] the spine's full fk column
+    rows: object          # int32[D] dirty spine rows (sentinel == Tl)
+    dn: object            # int32 scalar: live dirty-row count
+    bkeys: object         # int32[P, B] bucket keys
+    brows: object         # int32[P, B] bucket row ids (-1 pad)
+    bounds: object        # int32[P] bucket lower bounds
+    rid_carry: object     # int32[Tl] previous heartbeat's rids
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +108,11 @@ class OperatorBackend:
     join_delta: Callable  # (kl[Tl], rows[D] (pad >= Tl), bkeys[P,B],
                           #  brows[P,B], bounds[P]) -> rid int32[D]
                           #  (dirty-spine-row partitioned probe)
+    # the whole delta beat in ONE op (None -> chained fallback):
+    # (scan_in: tuple[FusedScanIn], join_in: tuple[FusedJoinIn])
+    #   -> (tuple of merged uint32[T, w] words — one per scan_in entry,
+    #       tuple of merged int32[Tl] rids — one per join_in entry)
+    fused_delta: Optional[Callable] = None
 
 
 _REGISTRY: Dict[str, OperatorBackend] = {}
@@ -154,7 +207,47 @@ def _jnp_join_delta(keys_l, rows, bucket_keys, bucket_rows, bounds):
                               bounds)
 
 
+def _jnp_fused_delta(scan_in, join_in):
+    from repro.kernels import ref
+    return ref.fused_delta_ref(scan_in, join_in)
+
+
 register_backend(OperatorBackend(
     name="jnp", scan=_jnp_scan, join_block=_jnp_join_block,
     join_partitioned=_jnp_join_partitioned, groupby=_jnp_groupby,
-    scan_delta=_jnp_scan_delta, join_delta=_jnp_join_delta))
+    scan_delta=_jnp_scan_delta, join_delta=_jnp_join_delta,
+    fused_delta=_jnp_fused_delta))
+
+
+# ---------------------------------------------------------------------------
+# Instrumentation: per-op launch counting
+# ---------------------------------------------------------------------------
+
+_COUNTED_OPS = ("scan", "join_block", "join_partitioned", "groupby",
+                "scan_delta", "join_delta", "fused_delta")
+
+
+def counting_backend(base: OperatorBackend, counts: Dict[str, int],
+                     name: Optional[str] = None) -> OperatorBackend:
+    """Wrap every op of ``base`` to bump ``counts[op]`` per invocation.
+
+    Backend ops are invoked at TRACE time (the cycles are jitted), so
+    with a jitted engine the counts are the per-beat STATIC launch
+    counts of the traced cycle — the executor clears the dict at traced-
+    function entry, so retraces never double-count.  With ``jit=False``
+    the same wrapper counts actual per-call invocations.  The wrapped
+    ops delegate verbatim, so stacking this over a recording backend
+    keeps the recording intact.
+    """
+    def wrap(op, opname):
+        if op is None:
+            return None
+
+        def counted(*args, **kwargs):
+            counts[opname] = counts.get(opname, 0) + 1
+            return op(*args, **kwargs)
+        return counted
+
+    return OperatorBackend(
+        name=name or f"counting-{base.name}",
+        **{op: wrap(getattr(base, op), op) for op in _COUNTED_OPS})

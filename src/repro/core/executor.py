@@ -59,11 +59,49 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.backends import resolve_backend
-from repro.core.lowering import build_cycle, build_delta_cycle, lower_plan
+from repro.core.backends import counting_backend, resolve_backend
+from repro.core.lowering import (PARTITIONED_MIN_CAPACITY, build_cycle,
+                                 build_delta_cycle, lower_plan)
 from repro.core.plan import CompiledPlan
 from repro.core.storage import (UPDATE_BATCH_RESET, UpdateSlots,
                                 empty_update_batch)
+
+
+def _measure_key_stats(plan: CompiledPlan,
+                       initial_data) -> Dict[str, Dict[str, int]]:
+    """Measured key skew of every partitioned-join candidate PK table
+    (index-less, at or above the partitioned threshold), from the
+    initial snapshot: live-row count and widest duplicate-key run.
+    ``lower_plan`` feeds it to the adaptive ``partition_layout`` so the
+    probe pane width matches real occupancy."""
+    stats = {}
+    for t, schema in plan.catalog.schemas.items():
+        if (schema.pk is None or schema.key_space > 0
+                or schema.capacity < PARTITIONED_MIN_CAPACITY):
+            continue
+        data = (initial_data or {}).get(t, {})
+        keys = np.asarray(data.get(schema.pk, ()))
+        if keys.size:
+            _, counts = np.unique(keys, return_counts=True)
+            stats[t] = {"n_live": int(keys.size),
+                        "max_dup": int(counts.max())}
+        else:
+            stats[t] = {"n_live": 0, "max_dup": 1}
+    return stats
+
+
+def _clear_counts_at_entry(fn, counts: Dict[str, int]):
+    """Reset a flavour's backend-op counter when its cycle (re)traces.
+
+    Backend ops fire at TRACE time under jit, so the counts are the
+    per-beat STATIC launch counts of the traced cycle; clearing at
+    traced-function entry makes retraces overwrite rather than
+    accumulate.  With ``jit=False`` every call re-enters, so the counts
+    are per-call either way."""
+    def wrapped(*args):
+        counts.clear()
+        return fn(*args)
+    return wrapped
 
 
 @dataclasses.dataclass
@@ -132,13 +170,25 @@ class CycleResult:
     folded several heartbeats into one collect; ``join_path`` is ""
     when the plan has no delta-eligible join stages) — the attribution
     benchmarks and the SLA gate need to split cycle time between the
-    paths."""
+    paths.
+
+    The ``t_*_s`` fields are the beat's per-phase host-time breakdown —
+    staging (queue drain + buffer fill + H2D), dispatch (the async
+    cycle launch), kernel (the collect-side block_until_ready wait) and
+    collect (result assemble + ticket routing) — and ``backend_ops``
+    its per-op backend launch counts (from the traced cycle), so the
+    fused path's one-launch claim is machine-checkable per beat."""
     tickets: Dict[str, List[Ticket]]
     wall_s: float
     admitted: int = 0
     dirty: int = 0
     scan_path: str = ""
     join_path: str = ""
+    t_stage_s: float = 0.0
+    t_dispatch_s: float = 0.0
+    t_kernel_s: float = 0.0
+    t_collect_s: float = 0.0
+    backend_ops: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -146,10 +196,16 @@ class _InFlight:
     """One dispatched-but-not-collected heartbeat."""
     admitted: Dict[str, List[Ticket]]
     results: Any
+    merged: Any = None          # sharded: device merge, launched at dispatch
     n_admitted: int = 0
     n_dirty: int = 0
     scan_path: str = "full"
     join_path: str = ""
+    t_stage_s: float = 0.0
+    t_dispatch_s: float = 0.0
+    t_kernel_s: float = 0.0
+    t_collect_s: float = 0.0
+    backend_ops: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class SharedDBEngine:
@@ -163,8 +219,9 @@ class SharedDBEngine:
         """``mesh``: an optional 1-D ``jax.sharding.Mesh`` — the always-on
         plan then runs SHARDED by spine-row range (core/sharding.py):
         row-sharded spine tables + carries, replicated join probe sides,
-        shard-local delta beats, all-shard reseed beats, and a host-side
-        cross-shard result merge at collect.  ``mesh=None`` (the default)
+        shard-local delta beats, all-shard reseed beats, and an
+        on-device cross-shard result merge launched at dispatch (collect
+        is a device-to-host copy).  ``mesh=None`` (the default)
         is the existing single-device path, untouched; a 1-device mesh is
         bit-identical to it."""
         self.plan = plan
@@ -174,31 +231,46 @@ class SharedDBEngine:
         self._update_queue: collections.deque = collections.deque()
         self._ticket_ids = itertools.count()
         backend = resolve_backend(kernels)
-        self._lowered = lower_plan(plan)
+        self._lowered = lower_plan(
+            plan, key_stats=_measure_key_stats(plan, initial_data))
+        # per-flavour backend-op launch counters (CycleResult.backend_ops):
+        # each cycle flavour traces through its own counting wrapper and
+        # clears its dict at traced-function entry, so the counts always
+        # reflect the CURRENT trace's static launch count per beat
+        self.backend_ops: Dict[str, Dict[str, int]] = {
+            "full": {}, "delta": {}, "delta_join": {}}
+        cb = {f: counting_backend(backend, c)
+              for f, c in self.backend_ops.items()}
         if mesh is not None:
             from repro.core import sharding
             spec = sharding.build_shard_spec(plan, mesh)
             self._shard_spec = spec
             self.state = sharding.init_sharded_state(spec, initial_data)
-            cycle = sharding.build_sharded_cycle(self._lowered, backend,
-                                                 spec)
+            cycle = sharding.build_sharded_cycle(self._lowered,
+                                                 cb["full"], spec)
             delta = sharding.build_sharded_delta_cycle(self._lowered,
-                                                       backend, spec)
+                                                       cb["delta"], spec)
             delta_j = sharding.build_sharded_delta_cycle(
-                self._lowered, backend, spec, delta_joins=True)
-            self._merge_results = sharding.build_merge(self._lowered,
-                                                       spec)
+                self._lowered, cb["delta_join"], spec, delta_joins=True)
+            # cross-shard result routing runs ON DEVICE, launched at
+            # dispatch right behind the cycle; collect only assembles
+            self._device_merge, self._assemble = sharding.build_merge(
+                self._lowered, spec)
             repl = spec.repl_sharding()
             self._stage = lambda a: jax.device_put(np.asarray(a), repl)
         else:
             self._shard_spec = None
             self.state = plan.catalog.init_state(initial_data)
-            cycle = build_cycle(self._lowered, backend)
-            delta = build_delta_cycle(self._lowered, backend)
-            delta_j = build_delta_cycle(self._lowered, backend,
+            cycle = build_cycle(self._lowered, cb["full"])
+            delta = build_delta_cycle(self._lowered, cb["delta"])
+            delta_j = build_delta_cycle(self._lowered, cb["delta_join"],
                                         delta_joins=True)
-            self._merge_results = None
+            self._device_merge, self._assemble = None, None
             self._stage = jnp.asarray
+        cycle = _clear_counts_at_entry(cycle, self.backend_ops["full"])
+        delta = _clear_counts_at_entry(delta, self.backend_ops["delta"])
+        delta_j = _clear_counts_at_entry(delta_j,
+                                         self.backend_ops["delta_join"])
         # donate storage: the snapshot rolls forward functionally in
         # place; the delta cycles additionally donate the carried scan
         # words + key partitions (each carry is produced by one heartbeat
@@ -257,7 +329,10 @@ class SharedDBEngine:
         self.last_delta_overflow = 0   # defensive invariant (always 0)
         self.last_parts_rebuilt: Dict[str, bool] = {}
         self.last_collect_stats = {"admitted": 0, "dirty": 0,
-                                   "scan_path": "", "join_path": ""}
+                                   "scan_path": "", "join_path": "",
+                                   "t_stage_s": 0.0, "t_dispatch_s": 0.0,
+                                   "t_kernel_s": 0.0, "t_collect_s": 0.0,
+                                   "backend_ops": {}}
 
     # ------------------------------------------------------------------ API
     def submit(self, template: str, params: Dict[str, Any]) -> Ticket:
@@ -417,6 +492,7 @@ class SharedDBEngine:
         while len(self._inflight) >= self.pipeline_depth:
             for name, tickets in self._collect_oldest().items():
                 self._spilled.setdefault(name, []).extend(tickets)
+        t0 = time.perf_counter()
         buf = self._staging[self._staging_idx]
         self._staging_idx = (self._staging_idx + 1) % len(self._staging)
         buf.reset()
@@ -431,6 +507,7 @@ class SharedDBEngine:
                      and self._delta_eligible(changed, touches))
         use_delta_join = (use_delta and self.delta_joins
                           and self._join_delta_eligible(touches))
+        t_staged = time.perf_counter()
         if use_delta:
             # carry-invalidation audit: a delta heartbeat must never
             # consume a carry produced under a different admission
@@ -456,6 +533,12 @@ class SharedDBEngine:
             self.state, self._carry, results = self._cycle(
                 self.state, queries, updates)
             self.full_cycles += 1
+        merged = None
+        if self._device_merge is not None:
+            # launch the on-device cross-shard merge right behind the
+            # cycle (async); collect only blocks + copies
+            merged = self._device_merge(results["_shard"])
+        t_launched = time.perf_counter()
         # both carry halves are (re)seeded by EVERY heartbeat: the
         # scan/parts half from the cycle's carry output, the rid half
         # from the results (full-probe heartbeats — including every full
@@ -471,12 +554,17 @@ class SharedDBEngine:
                 self.full_join_cycles += 1
         self._prev_params[...] = buf.params
         self._prev_active[...] = buf.active
+        flavour = ("delta_join" if use_delta_join else "delta") \
+            if use_delta else "full"
         self._inflight.append(_InFlight(
-            admitted, results,
+            admitted, results, merged=merged,
             n_admitted=sum(len(ts) for ts in admitted.values()),
             n_dirty=sum(touches.values()),
             scan_path=self.last_scan_path,
-            join_path=self.last_join_path))
+            join_path=self.last_join_path,
+            t_stage_s=t_staged - t0,
+            t_dispatch_s=t_launched - t_staged,
+            backend_ops=dict(self.backend_ops[flavour])))
 
     def collect(self) -> Dict[str, List[Ticket]]:
         """Block on the oldest in-flight heartbeat and route its results.
@@ -496,11 +584,20 @@ class SharedDBEngine:
             return (paths.pop() if len(paths) == 1
                     else "mixed" if paths else "")
 
+        ops: Dict[str, int] = {}
+        for f in stats:
+            for op, n in f.backend_ops.items():
+                ops[op] = ops.get(op, 0) + n
         self.last_collect_stats = {
             "admitted": sum(f.n_admitted for f in stats),
             "dirty": sum(f.n_dirty for f in stats),
             "scan_path": one_path(f.scan_path for f in stats),
-            "join_path": one_path(f.join_path for f in stats)}
+            "join_path": one_path(f.join_path for f in stats),
+            "t_stage_s": sum(f.t_stage_s for f in stats),
+            "t_dispatch_s": sum(f.t_dispatch_s for f in stats),
+            "t_kernel_s": sum(f.t_kernel_s for f in stats),
+            "t_collect_s": sum(f.t_collect_s for f in stats),
+            "backend_ops": ops}
         return out
 
     def _collect_oldest(self) -> Dict[str, List[Ticket]]:
@@ -509,12 +606,16 @@ class SharedDBEngine:
         flight = self._inflight.popleft()
         self._spilled_stats.append(flight)
         results = flight.results
+        t0 = time.perf_counter()
         jax.block_until_ready(results)
-        if self._merge_results is not None:
-            # sharded heartbeat: fold per-shard partials (route/sort
-            # candidates, group partial aggregates) into the final
-            # per-template results — the cross-shard routing pass
-            results = self._merge_results(results)
+        if flight.merged is not None:
+            jax.block_until_ready(flight.merged)
+        t_ready = time.perf_counter()
+        if self._assemble is not None:
+            # sharded heartbeat: the cross-shard routing pass already ran
+            # on-device (launched at dispatch); assembling the final
+            # per-template results is a device-to-host copy + passthrough
+            results = self._assemble(results, flight.merged)
         self.last_overflow = int(results["_overflow"])
         # full-rescan heartbeats have no delta capacities to violate, so
         # the invariant reads 0 rather than a stale delta-cycle value
@@ -530,6 +631,8 @@ class SharedDBEngine:
                 ticket.done_time = now
             out[name] = tickets
             self.queries_done += len(tickets)
+        flight.t_kernel_s = t_ready - t0
+        flight.t_collect_s = time.perf_counter() - t_ready
         self.cycles_run += 1
         return out
 
@@ -576,7 +679,12 @@ class SharedDBEngine:
                                     admitted=s["admitted"],
                                     dirty=s["dirty"],
                                     scan_path=s["scan_path"],
-                                    join_path=s["join_path"]))
+                                    join_path=s["join_path"],
+                                    t_stage_s=s["t_stage_s"],
+                                    t_dispatch_s=s["t_dispatch_s"],
+                                    t_kernel_s=s["t_kernel_s"],
+                                    t_collect_s=s["t_collect_s"],
+                                    backend_ops=s["backend_ops"]))
             t_prev = now
         return done
 

@@ -55,7 +55,7 @@ keys/validity) — query admission only changes the MASKS, never the
 rids — so on a heartbeat where the PK side was untouched, the carried
 rids stay exact for every spine row outside the update batch's dirty
 set.  ``build_delta_cycle(..., delta_joins=True)`` re-probes ONLY the
-dirty spine rows (``backend.join_delta`` / kernels/delta_join.py for
+dirty spine rows (``backend.join_delta`` / kernels/fused_delta.py for
 partitioned stages, a dense dirty-row probe for block stages) and merges
 them into the carried rid array with the same sorted-scatter fast path
 as delta scans.  The executor falls back to the full probe — within the
@@ -80,7 +80,7 @@ bit-identical to the cycles built here.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -112,9 +112,38 @@ DELTA_PANE_DIVISOR = 8
 SlotRange = Tuple[str, int, int]
 
 
-def partition_layout(capacity: int) -> Tuple[int, int]:
-    """(n_partitions, bucket_cap) for a PK table of this capacity."""
-    bucket_cap = min(PARTITION_BUCKET_CAP, capacity)
+def _round_up_128(x: int) -> int:
+    return ((max(1, x) + 127) // 128) * 128
+
+
+def partition_layout(capacity: int,
+                     stats: Optional[Dict[str, int]] = None
+                     ) -> Tuple[int, int]:
+    """(n_partitions, bucket_cap) for a PK table of this capacity.
+
+    With measured key ``stats`` — {"n_live": valid rows, "max_dup":
+    widest duplicate-key run}, recorded from the initial snapshot at
+    engine-construction time — the bucket capacity adapts to real
+    occupancy instead of the static PARTITION_BUCKET_CAP heuristic: a
+    sparsely loaded table gets narrower buckets (a cheaper probe pane
+    for the delta/fused kernels, whose work per dirty row is O(B)), and
+    a duplicate-heavy key column gets buckets at least as wide as its
+    widest run.  Correctness never depends on the layout — a key run
+    spanning buckets p..q resolves to bucket q, which holds the run's
+    tail (the max row id), for ANY bucket_cap — so stats steer only the
+    probe pane width, rounded to a 128-lane multiple.  Stats are
+    measured once and baked into the JoinStage: shapes stay static, the
+    bounded-computation property holds.
+    """
+    if stats is None:
+        bucket_cap = min(PARTITION_BUCKET_CAP, capacity)
+        return -(-capacity // bucket_cap), bucket_cap
+    occupancy = min(1.0, max(0, int(stats.get("n_live", capacity)))
+                    / capacity)
+    target = _round_up_128(int(PARTITION_BUCKET_CAP * occupancy))
+    bucket_cap = min(capacity,
+                     max(target, _round_up_128(int(stats.get("max_dup",
+                                                             1)))))
     return -(-capacity // bucket_cap), bucket_cap
 
 
@@ -256,7 +285,17 @@ def _slot_ranges(plan: CompiledPlan, names: List[str],
     return tuple((n, plan.offsets[n] - base, plan.caps[n]) for n in names)
 
 
-def lower_plan(plan: CompiledPlan) -> LoweredPlan:
+def lower_plan(plan: CompiledPlan,
+               key_stats: Optional[Dict[str, Dict[str, int]]] = None
+               ) -> LoweredPlan:
+    """Lower the compiled plan to the staged IR.
+
+    ``key_stats`` optionally maps PK table name -> measured key skew
+    ({"n_live", "max_dup"}, see ``partition_layout``) so partitioned
+    joins adapt their bucket layout to real occupancy; the executor
+    measures it from the initial snapshot.  ``None`` keeps the static
+    layout (runtime relayout paths that have no snapshot in hand).
+    """
     cat = plan.catalog
     W = plan.qcap // 32
 
@@ -292,7 +331,9 @@ def lower_plan(plan: CompiledPlan) -> LoweredPlan:
             kind = "gather"
         elif schema.capacity >= PARTITIONED_MIN_CAPACITY:
             kind = "partitioned"
-            n_parts, bucket_cap = partition_layout(schema.capacity)
+            n_parts, bucket_cap = partition_layout(
+                schema.capacity,
+                None if key_stats is None else key_stats.get(j.pk_table))
         else:
             kind = "block"
         joins.append(JoinStage(
@@ -410,6 +451,51 @@ def _build_apply_phase(lowered: LoweredPlan):
         return storage, partitions, rebuilt
 
     return apply_phase
+
+
+def _pane_window(st: ScanStage, covered, changed):
+    """One stage's admission-pane geometry, host-free: (span, w0, over).
+
+    ``span`` is the contiguous changed-word span over the stage's
+    covered slots (0 = no admission change), ``w0`` the pane's first
+    word column clamped so the static-width pane stays in range, and
+    ``over`` the words by which the span exceeds the pane capacity
+    (positive only on ineligible beats the executor should never have
+    dispatched — the defensive invariant).
+    """
+    base = st.wlo * 32
+    w = st.whi - st.wlo
+    A = st.delta_words
+    qd = changed[base:base + st.q_window] & covered
+    wch = jnp.any(qd.reshape(w, 32), axis=1)
+    first = jnp.argmax(wch).astype(jnp.int32)
+    last = (w - 1 - jnp.argmax(wch[::-1])).astype(jnp.int32)
+    span = jnp.where(jnp.any(wch), last - first + 1, 0)
+    over = jnp.maximum(span - A, 0)
+    w0 = jnp.minimum(first, w - A)
+    return span, w0, over
+
+
+def _pseudo_partitions(pk_tbl, pk_col: str):
+    """A block join's PK side as a single-bucket partition structure.
+
+    The whole key column is one bucket pane with bound INT_MIN (every
+    probe routes to it), invalid rows padded with the key sentinel and
+    row id -1 — exactly the ``storage.build_key_partitions`` encoding,
+    so the one-bucket probe (max valid row with an equal key) matches
+    ``storage.locate_rows_by_key`` bit for bit.  This funnels block-kind
+    carried joins through the same fused/partitioned dirty-probe path
+    instead of keeping a separate dense compare alive.
+    """
+    from repro.core.storage import INT_SENTINEL
+
+    keys = pk_tbl[pk_col]
+    valid = pk_tbl["_valid"]
+    bkeys = jnp.where(valid, keys, INT_SENTINEL)[None, :]
+    brows = jnp.where(valid, jnp.arange(keys.shape[0], dtype=jnp.int32),
+                      -1)[None, :]
+    bounds = jnp.full((1,), INT_MIN, jnp.int32)
+    return bkeys, brows, bounds
 
 
 def _bind_predicates(st: ScanStage, covered, pidx, queries):
@@ -546,6 +632,7 @@ def build_delta_cycle(lowered: LoweredPlan, backend: OperatorBackend,
     from the merged scan words every heartbeat.
     """
     from repro.core import dataquery as dq
+    from repro.core.backends import FusedJoinIn, FusedScanIn
     from repro.core.storage import scatter_dirty_rows
 
     plan = lowered.plan
@@ -555,8 +642,12 @@ def build_delta_cycle(lowered: LoweredPlan, backend: OperatorBackend,
     post_scan = _build_post_scan(lowered, backend)
     scan_covered = [jnp.asarray(s.covered) for s in lowered.scans]
     scan_pidx = [jnp.asarray(s.param_idx) for s in lowered.scans]
-    carried_spines = sorted({j.spine for j in lowered.joins
-                             if j.kind != "gather"})
+    carried_joins = [j for j in lowered.joins if j.kind != "gather"]
+    carried_spines = sorted({j.spine for j in carried_joins})
+    # the fused path: every predicated stage's pane + dirty rescan and
+    # (with delta_joins) every carried join's dirty probe collapse into
+    # ONE backend op; a backend without it keeps the chained ops
+    fused = backend.fused_delta is not None
 
     def cycle(storage, carry, rid_carry, queries, updates):
         storage, partitions, rebuilt = apply_phase(storage, updates,
@@ -565,62 +656,90 @@ def build_delta_cycle(lowered: LoweredPlan, backend: OperatorBackend,
 
         scan_masks, new_carry = {}, {}
         delta_over = jnp.zeros((), jnp.int32)
+        fused_scan_in, fused_stages = [], []
         for st, covered, pidx in zip(lowered.scans, scan_covered,
                                      scan_pidx):
             tbl = storage[st.table]
             base = st.wlo * 32
             if not st.cols:
                 # degenerate scans are O(T*w) bit ops — cheaper to
-                # recompute than to track, so they carry no state
+                # recompute than to track, so they carry no state (and
+                # stay outside the fused op)
                 act = queries["active"][base:base + st.q_window]
                 m = dq.pack(tbl["_valid"][:, None] & (act & covered)[None])
-            else:
-                _, lo, hi = _bind_predicates(st, covered, pidx, queries)
-                cols = jnp.stack([tbl[c] for c in st.cols])
-                w = st.whi - st.wlo
-                A = st.delta_words
+                scan_masks[st.table] = jnp.pad(m, ((0, 0),
+                                                   (st.wlo, W - st.whi)))
+                continue
+            _, lo, hi = _bind_predicates(st, covered, pidx, queries)
+            cols = jnp.stack([tbl[c] for c in st.cols])
+            A = st.delta_words
 
-                # admission pane: the contiguous word range holding every
-                # changed slot, recomputed over all rows and merged with
-                # one in-place dynamic_update_slice on the donated carry
-                qd = changed[base:base + st.q_window] & covered
-                wch = jnp.any(qd.reshape(w, 32), axis=1)
-                first = jnp.argmax(wch).astype(jnp.int32)
-                last = (w - 1
-                        - jnp.argmax(wch[::-1])).astype(jnp.int32)
-                span = jnp.where(jnp.any(wch), last - first + 1, 0)
-                delta_over += jnp.maximum(span - A, 0)
-                w0 = jnp.minimum(first, w - A)
-                lo_a = jax.lax.dynamic_slice(lo, (0, w0 * 32),
-                                             (lo.shape[0], A * 32))
-                hi_a = jax.lax.dynamic_slice(hi, (0, w0 * 32),
-                                             (hi.shape[0], A * 32))
-                pane = backend.scan(cols, lo_a, hi_a, tbl["_valid"])
-                m = jax.lax.dynamic_update_slice(carry["scan"][st.table],
-                                                 pane, (0, w0))
-
-                # dirty rows: the update batch's sorted/unique touched
-                # rows, refreshed against the full window and scattered
-                # back by row (pad sentinel == capacity -> dropped)
-                dr = tbl["_dirty_rows"]
-                dwords = backend.scan_delta(cols, lo, hi, tbl["_valid"],
-                                            dr)
-                m = scatter_dirty_rows(m, dr, dwords,
-                                       cat.schemas[st.table].capacity)
-                delta_over += tbl["_dirty_overflow"].astype(jnp.int32)
-                new_carry[st.table] = m
+            # admission pane: the contiguous word range holding every
+            # changed slot (recomputed over all rows at pane width) and
+            # the dirty rows (rescanned at full window width); both
+            # merge in place into the donated carry — fused in one op,
+            # or chained through scan / scan_delta / the scatter
+            span, w0, over = _pane_window(st, covered, changed)
+            delta_over += over
+            lo_a = jax.lax.dynamic_slice(lo, (0, w0 * 32),
+                                         (lo.shape[0], A * 32))
+            hi_a = jax.lax.dynamic_slice(hi, (0, w0 * 32),
+                                         (hi.shape[0], A * 32))
+            dr = tbl["_dirty_rows"]
+            delta_over += tbl["_dirty_overflow"].astype(jnp.int32)
+            if fused:
+                fused_scan_in.append(FusedScanIn(
+                    cols=cols, lo=lo, hi=hi, lo_p=lo_a, hi_p=hi_a,
+                    valid=tbl["_valid"], carry=carry["scan"][st.table],
+                    w0=w0, span=span, rows=dr,
+                    dn=tbl["_dirty_n"].astype(jnp.int32)))
+                fused_stages.append(st)
+                continue
+            pane = backend.scan(cols, lo_a, hi_a, tbl["_valid"])
+            m = jax.lax.dynamic_update_slice(carry["scan"][st.table],
+                                             pane, (0, w0))
+            dwords = backend.scan_delta(cols, lo, hi, tbl["_valid"], dr)
+            m = scatter_dirty_rows(m, dr, dwords,
+                                   cat.schemas[st.table].capacity)
+            new_carry[st.table] = m
             scan_masks[st.table] = jnp.pad(m, ((0, 0),
                                                (st.wlo, W - st.whi)))
 
+        fused_join_in = []
         if delta_joins:
             # defensive: a carried join's spine dirty set must not have
             # overflowed either (the host checks the same thing exactly)
             for spine in carried_spines:
                 delta_over += \
                     storage[spine]["_dirty_overflow"].astype(jnp.int32)
+            if fused:
+                for j in carried_joins:
+                    tbl = storage[j.spine]
+                    if j.kind == "partitioned":
+                        bkeys, brows, bounds = partitions[j.pk_table]
+                    else:  # block: single-bucket pseudo-partitions
+                        bkeys, brows, bounds = _pseudo_partitions(
+                            storage[j.pk_table], j.pk_col)
+                    fused_join_in.append(FusedJoinIn(
+                        keys=tbl[j.fk_col], rows=tbl["_dirty_rows"],
+                        dn=tbl["_dirty_n"].astype(jnp.int32),
+                        bkeys=bkeys, brows=brows, bounds=bounds,
+                        rid_carry=rid_carry[j.key]))
+
+        fused_rids = None
+        if fused and (fused_scan_in or fused_join_in):
+            words, rids = backend.fused_delta(tuple(fused_scan_in),
+                                              tuple(fused_join_in))
+            for st, m in zip(fused_stages, words):
+                new_carry[st.table] = m
+                scan_masks[st.table] = jnp.pad(m, ((0, 0),
+                                                   (st.wlo, W - st.whi)))
+            if delta_joins:
+                fused_rids = {j.key: r
+                              for j, r in zip(carried_joins, rids)}
 
         results = post_scan(storage, partitions, scan_masks,
-                            rid_carry=rid_carry)
+                            rid_carry=rid_carry, fused_rids=fused_rids)
         results["_delta_overflow"] = delta_over
         results["_parts_rebuilt"] = rebuilt
         return storage, {"scan": new_carry, "parts": partitions}, results
@@ -645,7 +764,8 @@ def _build_post_scan(lowered: LoweredPlan, backend: OperatorBackend):
     sort_subs = [jnp.asarray(s.sub_mask) for s in lowered.sorts]
     route_subs = [jnp.asarray(r.sub_mask) for r in lowered.routes]
 
-    def post_scan(storage, partitions, scan_masks, rid_carry=None):
+    def post_scan(storage, partitions, scan_masks, rid_carry=None,
+                  fused_rids=None):
         # 3. shared joins: ONE big join per signature, query_id in the
         #    predicate via bitmask intersection; non-subscribers pass
         #    through untouched.  With a carried rid array (delta-join
@@ -653,7 +773,9 @@ def _build_post_scan(lowered: LoweredPlan, backend: OperatorBackend):
         #    fresh rids merge into the carry on the sorted-scatter fast
         #    path and the bitmask intersection — which DOES depend on
         #    this heartbeat's admission — is recomputed from the merged
-        #    scan words as usual.
+        #    scan words as usual.  With ``fused_rids`` the fused delta
+        #    op already merged every carried join's rids; only the
+        #    intersection remains here.
         spine_masks = dict(scan_masks)
         join_rids = {}
         for st, sub in zip(lowered.joins, join_subs):
@@ -664,6 +786,12 @@ def _build_post_scan(lowered: LoweredPlan, backend: OperatorBackend):
                     tbl[st.fk_col], m,
                     storage[st.pk_table]["_pk_index"],
                     scan_masks[st.pk_table])
+            elif fused_rids is not None:
+                rid = fused_rids[st.key]
+                mask_r = scan_masks[st.pk_table]
+                gathered = mask_r[jnp.clip(rid, 0, mask_r.shape[0] - 1)]
+                combined = jnp.where((rid >= 0)[:, None], m & gathered,
+                                     jnp.uint32(0))
             elif rid_carry is not None:
                 cap = cat.schemas[st.spine].capacity
                 dr = tbl["_dirty_rows"]

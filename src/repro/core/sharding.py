@@ -69,9 +69,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import dataquery as dq
 from repro.core import operators as ops
-from repro.core.backends import OperatorBackend
+from repro.core.backends import (FusedJoinIn, FusedScanIn,
+                                 OperatorBackend)
 from repro.core.lowering import (LoweredPlan, _bind_predicates,
-                                 _build_post_scan)
+                                 _build_post_scan, _pane_window,
+                                 _pseudo_partitions)
 from repro.core.plan import CompiledPlan
 from repro.core.storage import (Catalog, TableSchema, apply_updates,
                                 build_key_partitions, bulk_load,
@@ -384,6 +386,24 @@ def _stage_delta(st, backend, covered, pidx, tbl, carry_words, queries,
     return m, over
 
 
+def _fused_scan_in(st, covered, pidx, tbl, carry_words, queries,
+                   dirty_rows, dirty_overflow, dn):
+    """One stage's FusedScanIn + overflow count: the ``_stage_delta``
+    prologue (predicate bind, pane geometry, pane slices) with the
+    compute deferred to the single fused op."""
+    _, lo, hi = _bind_predicates(st, covered, pidx, queries)
+    cols = jnp.stack([tbl[c] for c in st.cols])
+    A = st.delta_words
+    span, w0, over = _pane_window(st, covered, queries["changed"])
+    lo_a = jax.lax.dynamic_slice(lo, (0, w0 * 32), (lo.shape[0], A * 32))
+    hi_a = jax.lax.dynamic_slice(hi, (0, w0 * 32), (hi.shape[0], A * 32))
+    return FusedScanIn(
+        cols=cols, lo=lo, hi=hi, lo_p=lo_a, hi_p=hi_a,
+        valid=tbl["_valid"], carry=carry_words, w0=w0, span=span,
+        rows=dirty_rows, dn=dn.astype(jnp.int32)), \
+        over + dirty_overflow.astype(jnp.int32)
+
+
 def _pad_words(st, m, W):
     return jnp.pad(m, ((0, 0), (st.wlo, W - st.whi)))
 
@@ -440,6 +460,10 @@ def _build_impl(lowered: LoweredPlan, backend: OperatorBackend,
     limits = jnp.asarray(lowered.limits)
     carried_sh_spines = sorted({j.spine for j in sh_joins
                                 if j.kind != "gather"})
+    # fused delta beat: every pane, dirty rescan and dirty probe — over
+    # mirrors AND shard-local slices — collapses into ONE backend op per
+    # shard (a backend without fused_delta keeps the chained stages)
+    fused = delta and backend.fused_delta is not None
 
     def body(sh_in: Dict, repl_in: Dict):
         """One shard's slice of the heartbeat (the whole beat runs in
@@ -481,11 +505,21 @@ def _build_impl(lowered: LoweredPlan, backend: OperatorBackend,
         mirror_words = {}                 # window-local, replicated
         delta_over_repl = jnp.zeros((), jnp.int32)   # identical per shard
         delta_over_local = jnp.zeros((), jnp.int32)  # this shard's own
+        fused_scan, fused_own = [], []    # inputs + ("mi"/"sh", stage)
         for st in mi_scans:
             mt = mirror[st.table]
             if not st.cols:
                 mirror_words[st.table] = _stage_degenerate(
                     st, scan_covered[st.table], mt["_valid"], queries)
+            elif fused:
+                e, o = _fused_scan_in(
+                    st, scan_covered[st.table], scan_pidx[st.table], mt,
+                    repl_in["carry_m"][st.table], queries,
+                    mt["_dirty_rows"], mt["_dirty_overflow"],
+                    mt["_dirty_n"])
+                fused_scan.append(e)
+                fused_own.append(("mi", st))
+                delta_over_repl = delta_over_repl + o
             elif delta:
                 # replicated maintenance: pane + global dirty rows
                 m, o = _stage_delta(
@@ -511,8 +545,6 @@ def _build_impl(lowered: LoweredPlan, backend: OperatorBackend,
                                    scan_pidx[st.table], sl, queries)
                 mirror_words[st.table] = jax.lax.all_gather(
                     pane, spec.axis, tiled=True)
-        mirror_masks = {st.table: _pad_words(st, mirror_words[st.table],
-                                             W) for st in mi_scans}
 
         # -- 4. row-sharded scan stages (shard-local, both flavours)
         sh_words = {}
@@ -522,6 +554,16 @@ def _build_impl(lowered: LoweredPlan, backend: OperatorBackend,
             if not st.cols:
                 m = _stage_degenerate(st, scan_covered[st.table],
                                       tbl["_valid"], queries)
+            elif fused:
+                e, o = _fused_scan_in(
+                    st, scan_covered[st.table], scan_pidx[st.table],
+                    tbl, sh_in["carry"][st.table], queries,
+                    tbl["_dirty_rows"], tbl["_dirty_overflow"],
+                    tbl["_dirty_n"])
+                fused_scan.append(e)
+                fused_own.append(("sh", st))
+                delta_over_local = delta_over_local + o
+                continue
             elif delta:
                 m, o = _stage_delta(
                     st, backend, scan_covered[st.table],
@@ -536,11 +578,62 @@ def _build_impl(lowered: LoweredPlan, backend: OperatorBackend,
                 sh_words[st.table] = m
             scan_masks[st.table] = _pad_words(st, m, W)
 
+        # -- 4b. the ONE fused delta op: every deferred pane/dirty/probe
+        #        unit — mirror and shard-local alike — in a single
+        #        backend launch; the probe sides are replicated so the
+        #        whole call is shard-local math (no collective)
+        delta_probe = delta and delta_joins
+        fused_join, fused_jkeys = [], []
+        if fused and delta_probe:
+            for st in sh_joins:
+                if st.kind == "gather":
+                    continue
+                tbl = tables[st.spine]
+                if st.kind == "partitioned":
+                    bkeys, brows, bounds = partitions[st.pk_table]
+                else:  # block: single-bucket pseudo-partitions
+                    bkeys, brows, bounds = _pseudo_partitions(
+                        mirror[st.pk_table], st.pk_col)
+                fused_join.append(FusedJoinIn(
+                    keys=tbl[st.fk_col], rows=tbl["_dirty_rows"],
+                    dn=tbl["_dirty_n"].astype(jnp.int32),
+                    bkeys=bkeys, brows=brows, bounds=bounds,
+                    rid_carry=sh_in["rids"][st.key]))
+                fused_jkeys.append(st.key)
+            for st in mi_joins:
+                if st.kind == "gather":
+                    continue
+                mt = mirror[st.spine]
+                if st.kind == "partitioned":
+                    bkeys, brows, bounds = partitions[st.pk_table]
+                else:
+                    bkeys, brows, bounds = _pseudo_partitions(
+                        mirror[st.pk_table], st.pk_col)
+                fused_join.append(FusedJoinIn(
+                    keys=mt[st.fk_col], rows=mt["_dirty_rows"],
+                    dn=mt["_dirty_n"].astype(jnp.int32),
+                    bkeys=bkeys, brows=brows, bounds=bounds,
+                    rid_carry=repl_in["rids_m"][st.key]))
+                fused_jkeys.append(st.key)
+        fused_rids = None
+        if fused and (fused_scan or fused_join):
+            words, rids = backend.fused_delta(tuple(fused_scan),
+                                              tuple(fused_join))
+            for (side, st), m in zip(fused_own, words):
+                if side == "mi":
+                    mirror_words[st.table] = m
+                else:
+                    sh_words[st.table] = m
+                    scan_masks[st.table] = _pad_words(st, m, W)
+            if delta_probe:
+                fused_rids = dict(zip(fused_jkeys, rids))
+        mirror_masks = {st.table: _pad_words(st, mirror_words[st.table],
+                                             W) for st in mi_scans}
+
         # -- 5. joins on row-sharded spines (probe sides replicated:
         #       partitions / pk index / mirror words — shard-local math)
         spine_masks = dict(scan_masks)
         sh_rids = {}
-        delta_probe = delta and delta_joins
         for st in sh_joins:
             tbl = tables[st.spine]
             m = spine_masks[st.spine]
@@ -551,18 +644,22 @@ def _build_impl(lowered: LoweredPlan, backend: OperatorBackend,
                     tbl[st.fk_col], m, mirror[st.pk_table]["_pk_index"],
                     mask_r)
             elif delta_probe:
-                dr = tbl["_dirty_rows"]
-                if st.kind == "partitioned":
-                    bkeys, brows, bounds = partitions[st.pk_table]
-                    rid_d = backend.join_delta(tbl[st.fk_col], dr,
-                                               bkeys, brows, bounds)
+                if fused_rids is not None:
+                    rid = fused_rids[st.key]   # merged in the fused op
                 else:
-                    pk_tbl = mirror[st.pk_table]
-                    kd = tbl[st.fk_col][jnp.clip(dr, 0, Ts - 1)]
-                    rid_d = locate_rows_by_key(pk_tbl[st.pk_col], kd,
-                                               pk_tbl["_valid"])
-                rid = scatter_dirty_rows(sh_in["rids"][st.key], dr,
-                                         rid_d, Ts)
+                    dr = tbl["_dirty_rows"]
+                    if st.kind == "partitioned":
+                        bkeys, brows, bounds = partitions[st.pk_table]
+                        rid_d = backend.join_delta(tbl[st.fk_col], dr,
+                                                   bkeys, brows, bounds)
+                    else:
+                        pk_tbl = mirror[st.pk_table]
+                        kd = tbl[st.fk_col][jnp.clip(dr, 0, Ts - 1)]
+                        rid_d = locate_rows_by_key(pk_tbl[st.pk_col],
+                                                   kd,
+                                                   pk_tbl["_valid"])
+                    rid = scatter_dirty_rows(sh_in["rids"][st.key], dr,
+                                             rid_d, Ts)
                 gathered = mask_r[jnp.clip(rid, 0, mask_r.shape[0] - 1)]
                 combined = jnp.where((rid >= 0)[:, None], m & gathered,
                                      jnp.uint32(0))
@@ -649,8 +746,13 @@ def _build_impl(lowered: LoweredPlan, backend: OperatorBackend,
                 delta_over_repl = delta_over_repl + \
                     mirror[spine]["_dirty_overflow"].astype(jnp.int32)
         mi_storage = dict(mirror)
+        mi_fused = None
+        if fused_rids is not None:
+            mi_fused = {j.key: fused_rids[j.key] for j in mi_joins
+                        if j.kind != "gather"}
         mi_results = mirror_post(mi_storage, partitions, mirror_masks,
-                                 rid_carry=mi_rid_carry)
+                                 rid_carry=mi_rid_carry,
+                                 fused_rids=mi_fused)
 
         # -- 8. bundle outputs: (row-sharded, replicated)
         sh_out = {
@@ -769,16 +871,24 @@ def build_sharded_delta_cycle(lowered: LoweredPlan,
 
 
 def build_merge(lowered: LoweredPlan, spec: ShardSpec):
-    """Fold a sharded heartbeat's raw results into the executor's
-    per-template result contract.
+    """Cross-shard result routing, split into an ON-DEVICE merge and a
+    host assemble: ``(device_merge, assemble)``.
 
-    Mirrored-spine templates pass through (already final).  Row-sharded
-    route/sort templates merge their per-shard candidate lists — shard
-    order IS global row order, so a stable merge on the returned
-    comparison keys reproduces the unsharded sort exactly (key ties
-    break by shard then local row, the global row order) — and group
-    templates sum the per-shard partial aggregates before the top-k.
-    At S=1 every merge is an identity.
+    ``device_merge(shard_partials)`` is a jitted pytree function over
+    ``results["_shard"]``: row-sharded route/sort templates merge their
+    per-shard candidate lists with one stable device argsort per
+    template — shard order IS global row order, so a stable sort on the
+    returned comparison keys reproduces the unsharded sort exactly (key
+    ties break by shard then local row, the global row order) — and
+    group templates sum the per-shard partial aggregates before a
+    device top-k.  The executor launches it right after the cycle at
+    DISPATCH time, so the merge overlaps the pipeline and ``collect()``
+    does no host-side key-merge at all.
+
+    ``assemble(results, merged)`` is the host epilogue: per-template
+    passthrough of mirrored (already final) results, the merged device
+    arrays, and scalar overflow sums.  At S=1 every merge is an
+    identity.
     """
     mirrored = set(spec.mirrored)
     R = spec.plan.max_results
@@ -799,55 +909,70 @@ def build_merge(lowered: LoweredPlan, spec: ShardSpec):
             for name, o, c in st.slots:
                 group_tpl[name] = (st, gkey, o, c)
 
-    def _merge_ordered(rows, keys, limit):
-        """[S, R] per-shard candidate rows (prefix-filled, -1 padded,
-        each in key order) -> first ``limit`` rows in global key order,
-        padded to R.  Stable: equal keys resolve in shard order."""
-        flat_r = rows.reshape(-1)
-        flat_k = keys.reshape(-1)
-        order = np.argsort(flat_k, kind="stable")
-        cand = flat_r[order]
-        cand = cand[cand >= 0][:min(limit, R)]
-        out = np.full((R,), -1, np.int32)
-        out[:len(cand)] = cand
-        return out
+    def _merge_ordered(rows, keys, lim):
+        """rows/keys [S, c, R] per-shard candidates (prefix-filled, -1
+        padded, each in key order), lim int32[c] -> [c, R] first ``lim``
+        rows per slot in global key order, -1 padded.  Stable: equal
+        keys resolve in shard order == global row order."""
+        c = rows.shape[1]
+        flat_r = jnp.transpose(rows, (1, 0, 2)).reshape(c, -1)
+        flat_k = jnp.transpose(keys, (1, 0, 2)).reshape(c, -1)
+        order = jnp.argsort(flat_k, axis=1, stable=True)
+        cand = jnp.take_along_axis(flat_r, order, axis=1)
+        valid = cand >= 0
+        pos = jnp.cumsum(valid, axis=1) - 1       # rank among survivors
+        keep = valid & (pos < lim[:, None])
+        out = jnp.full((c, R), -1, jnp.int32)
+        return out.at[jnp.arange(c)[:, None],
+                      jnp.where(keep, pos, R)].set(
+            jnp.where(keep, cand, -1), mode="drop")
 
-    def merge(results) -> Dict:
+    def device_merge(shard) -> Dict:
+        merged = {}
+        for name, (st, o, c) in sort_tpl.items():
+            base = st.wlo * 32
+            lim = jnp.asarray(np.minimum(
+                limits[base + o:base + o + c], R).astype(np.int32))
+            p = shard[name]
+            merged[name] = {"rows": _merge_ordered(p["rows"], p["keys"],
+                                                   lim)}
+        for name, (st, o, c) in route_tpl.items():
+            base = st.wlo * 32
+            lim = jnp.asarray(np.minimum(
+                limits[base + o:base + o + c], R).astype(np.int32))
+            rows = shard[name]["rows"]
+            # natural order == global row order: merge on the row id
+            keys = jnp.where(rows >= 0, rows, ops.INT_MAX)
+            merged[name] = {"rows": _merge_ordered(rows, keys, lim)}
+        done = set()
+        for name, (st, gkey, o, c) in group_tpl.items():
+            agg = st.agg
+            if gkey not in done:
+                done.add(gkey)
+                merged[gkey] = {
+                    "count": jnp.sum(shard[gkey]["count"], axis=0),
+                    "sum": jnp.sum(shard[gkey]["sum"], axis=0)}
+        for name, (st, gkey, o, c) in group_tpl.items():
+            agg = st.agg
+            count = merged[gkey]["count"]
+            score = merged[gkey]["sum"] if agg.order_by == "sum" \
+                else count
+            cols_mat = score[:, o:o + c].T                  # [c, G]
+            order = jnp.argsort(-cols_mat, axis=1,
+                                stable=True)[:, :agg.top_k]
+            merged[name] = {
+                "groups": order.astype(jnp.int32),
+                "scores": jnp.take_along_axis(cols_mat, order, axis=1),
+                "counts": jnp.take_along_axis(count[:, o:o + c].T,
+                                              order, axis=1)}
+        return merged
+
+    def assemble(results, merged) -> Dict:
         out = {}
-        shard = results["_shard"]
         for name in spec.plan.templates:
-            if name in sort_tpl or name in route_tpl:
-                st, o, c = (sort_tpl.get(name) or route_tpl[name])
-                p = shard[name]
-                rows = np.asarray(p["rows"])           # [S, c, R]
-                if name in sort_tpl:
-                    keys = np.asarray(p["keys"])
-                else:
-                    # natural order == global row order: merge on row id
-                    keys = np.where(rows >= 0, rows, np.iinfo(np.int32).max)
-                base = st.wlo * 32
-                merged = np.stack([
-                    _merge_ordered(rows[:, s], keys[:, s],
-                                   int(limits[base + o + s]))
-                    for s in range(c)])
-                out[name] = {"rows": merged}
-            elif name in group_tpl:
-                st, gkey, o, c = group_tpl[name]
-                agg = st.agg
-                count = np.asarray(shard[gkey]["count"]).sum(axis=0)
-                ssum = np.asarray(shard[gkey]["sum"]).sum(axis=0)
-                score = ssum if agg.order_by == "sum" else count
-                groups = np.zeros((c, agg.top_k), np.int32)
-                scores = np.zeros((c, agg.top_k), np.float32)
-                counts = np.zeros((c, agg.top_k), np.float32)
-                for s in range(c):
-                    col = score[:, o + s]
-                    top = np.argsort(-col, kind="stable")[:agg.top_k]
-                    groups[s] = top.astype(np.int32)
-                    scores[s] = col[top]
-                    counts[s] = count[top, o + s]
-                out[name] = {"groups": groups, "scores": scores,
-                             "counts": counts}
+            if name in sort_tpl or name in route_tpl or \
+                    name in group_tpl:
+                out[name] = merged[name]               # device-merged
             else:
                 out[name] = results[name]              # mirrored: final
         out["_overflow"] = (
@@ -861,4 +986,4 @@ def build_merge(lowered: LoweredPlan, spec: ShardSpec):
         out["_join_rids"] = results["_join_rids"]
         return out
 
-    return merge
+    return jax.jit(device_merge), assemble

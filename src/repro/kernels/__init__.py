@@ -45,18 +45,24 @@ def _pallas_groupby(group_code, values, mask, n_groups: int):
 
 
 def _pallas_scan_delta(cols, lo, hi, valid, rows):
-    from repro.kernels.delta_scan import delta_scan_pallas
+    from repro.kernels.fused_delta import delta_scan_pallas
     return delta_scan_pallas(cols, lo, hi, valid, rows,
                              interpret=_interpret())
 
 
 def _pallas_join_delta(keys_l, rows, bucket_keys, bucket_rows, bounds):
-    from repro.kernels.delta_join import delta_join_pallas
+    from repro.kernels.fused_delta import delta_join_pallas
     return delta_join_pallas(keys_l, rows, bucket_keys, bucket_rows,
                              bounds, interpret=_interpret())
+
+
+def _pallas_fused_delta(scan_in, join_in):
+    from repro.kernels.fused_delta import fused_delta_pallas
+    return fused_delta_pallas(scan_in, join_in, interpret=_interpret())
 
 
 _backends.register_backend(_backends.OperatorBackend(
     name="pallas", scan=_pallas_scan, join_block=_pallas_join_block,
     join_partitioned=_pallas_join_partitioned, groupby=_pallas_groupby,
-    scan_delta=_pallas_scan_delta, join_delta=_pallas_join_delta))
+    scan_delta=_pallas_scan_delta, join_delta=_pallas_join_delta,
+    fused_delta=_pallas_fused_delta))

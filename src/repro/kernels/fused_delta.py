@@ -1,0 +1,362 @@
+"""Fused delta-heartbeat mega-kernel: the WHOLE incremental beat in one
+``pallas_call``.
+
+The chained delta path (PR 3/4) launches one kernel per phase per stage
+— an admission-pane compare, a dirty-row rescan and a dirty-spine-row
+bucket probe for every predicated scan / carried join — and threads
+materialized intermediates (pane words, dirty words, dirty rids) between
+them through XLA.  At trickle rates the beat's wall time is dominated by
+that dispatch chain, not by compute.  This kernel collapses the chain:
+
+  grid = (N,)   N = Σ_stages (pane tiles + dirty slots) + Σ_joins slots
+
+one flat grid whose every program is ONE unit of delta work, routed by a
+scalar-prefetched work descriptor ``sdesc int32[N, 4]``:
+
+  sdesc[i] = (kind, owner, idx, gather)
+
+  kind 0 (PANE)  — one ``PANE_TILE``-row tile of stage ``owner``'s
+                   admission-pane compare: the pane-width predicate
+                   slices (lo_p/hi_p, pre-sliced at w0 by the caller)
+                   against the tile's column values, bit-packed to
+                   ``A`` words per row.  ``idx`` picks the tile.
+  kind 1 (DIRTY) — one dirty row of stage ``owner``, re-evaluated
+                   against the FULL window: ``gather`` holds the row id
+                   (pad slots clamp in range) and the BlockSpec
+                   index_map reads it to DMA exactly that column of
+                   cols — the scalar-prefetch gather.
+  kind 2 (PROBE) — one dirty spine row of carried join ``owner``:
+                   ``gather`` holds the row's bucket index (the
+                   ``searchsorted`` routing runs in the XLA prologue —
+                   it needs the key VALUE, which no index_map can see)
+                   and the kernel probes that ONE bucket pane.
+                   Block-kind joins arrive as single-bucket
+                   pseudo-partitions, so every carried join probes
+                   through this same path.
+
+Non-owning programs park on per-output GARBAGE blocks (one spare tile /
+slot appended past the real extent), so each real output block has
+exactly one writer and no cross-program masking is needed.  A thin XLA
+epilogue inside the op — still one kernel launch on the hot path —
+merges the pane into the carried words (in-place dynamic_update_slice,
+skipped when ``span == 0``), scatters the dirty words/rids back on the
+sorted-unique fast path (pad sentinels drop), and returns the merged
+carries directly: the ``[Tl, B]`` candidate panes and full-window
+compare matrices of the chained path are never materialized.
+
+The standalone ``delta_scan_pallas`` / ``delta_join_pallas`` kernels
+(formerly kernels/delta_scan.py / delta_join.py) are absorbed below:
+they are the DIRTY / PROBE program bodies as free-standing calls, kept
+as the chained fallback surface (``OperatorBackend.scan_delta`` /
+``join_delta``) for backends or beats the fused path does not cover.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.storage import scatter_dirty_rows
+
+PANE_TILE = 256
+
+_PANE, _DIRTY, _PROBE = 0, 1, 2
+
+
+def _pack_bits(ok):
+    """bool[R, 32*w] -> uint32[R, w] (32 query lanes per word)."""
+    R = ok.shape[0]
+    w = ok.shape[1] // 32
+    bits = ok.reshape(R, w, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits * weights[None, None, :], axis=-1,
+                   dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# The mega-kernel
+# ---------------------------------------------------------------------------
+
+
+def _mega_kernel(sdesc_ref, *refs, sgeom, jgeom):
+    i = pl.program_id(0)
+    kind = sdesc_ref[i, 0]
+    owner = sdesc_ref[i, 1]
+    n_in = 8 * len(sgeom) + 3 * len(jgeom)
+    for s, (C, Q, A, R, _nt, _D) in enumerate(sgeom):
+        (cols_t, cols_r, valid_t, valid_r, lo, hi, lo_p,
+         hi_p) = refs[8 * s:8 * s + 8]
+        pane_out = refs[n_in + 2 * s]
+        dwords_out = refs[n_in + 2 * s + 1]
+
+        @pl.when((kind == _PANE) & (owner == s))
+        def _():
+            ok = jnp.ones((R, 32 * A), jnp.bool_)
+            for c in range(C):
+                x = cols_t[c, :][:, None]                   # [R, 1]
+                ok &= (x >= lo_p[c, :][None, :]) \
+                    & (x <= hi_p[c, :][None, :])
+            ok &= valid_t[...][:, None]
+            pane_out[...] = _pack_bits(ok)
+
+        @pl.when((kind == _DIRTY) & (owner == s))
+        def _():
+            ok = jnp.ones((1, Q), jnp.bool_)
+            for c in range(C):
+                x = cols_r[c, 0]
+                ok &= (x >= lo[c, :][None, :]) \
+                    & (x <= hi[c, :][None, :])
+            ok &= valid_r[0]
+            dwords_out[...] = _pack_bits(ok)
+
+    for j, (_B, _Dj) in enumerate(jgeom):
+        kd, bkeys, brows = refs[8 * len(sgeom) + 3 * j:
+                                8 * len(sgeom) + 3 * j + 3]
+        rid_out = refs[n_in + 2 * len(sgeom) + j]
+
+        @pl.when((kind == _PROBE) & (owner == j))
+        def _():
+            hit = (bkeys[...] == kd[0]) & (brows[...] >= 0)  # [1, B]
+            rid_out[0] = jnp.max(jnp.where(hit, brows[...], -1))
+
+
+def fused_delta_pallas(scan_in, join_in, *, interpret: bool = True):
+    """Same contract as kernels/ref.fused_delta_ref: tuples of
+    backends.FusedScanIn / FusedJoinIn -> (merged words, merged rids)."""
+    scan_in, join_in = tuple(scan_in), tuple(join_in)
+    if not scan_in and not join_in:
+        return (), ()
+
+    # ---- static geometry + padded inputs -------------------------------
+    sgeom, padded = [], []
+    for e in scan_in:
+        C, T = e.cols.shape
+        Q = e.lo.shape[1]
+        A = e.lo_p.shape[1] // 32
+        R = min(PANE_TILE, T)
+        nt = -(-T // R)
+        pad = nt * R - T
+        cols_p = jnp.pad(e.cols, ((0, 0), (0, pad))) if pad else e.cols
+        valid_p = jnp.pad(e.valid, (0, pad)) if pad else e.valid
+        D = e.rows.shape[0]
+        sgeom.append((C, Q, A, R, nt, D))
+        padded.append((cols_p, valid_p))
+    jgeom, probes = [], []
+    for e in join_in:
+        P, B = e.bkeys.shape
+        Tl = e.keys.shape[0]
+        D = e.rows.shape[0]
+        # XLA prologue (shared with the reference probe): gather the
+        # dirty rows' keys and route each to its ONE candidate bucket
+        safe = jnp.clip(e.rows, 0, Tl - 1)
+        kd = e.keys[safe]
+        b = jnp.searchsorted(e.bounds, kd,
+                             side="right").astype(jnp.int32) - 1
+        b = jnp.clip(b, 0, P - 1)
+        jgeom.append((B, D))
+        probes.append((kd, b))
+
+    # ---- the flat work descriptor (kind, owner, idx, gather) ----------
+    blocks = []
+    for s, ((C, Q, A, R, nt, D), e) in enumerate(zip(sgeom, scan_in)):
+        stat = np.zeros((nt, 4), np.int32)
+        stat[:, 0] = _PANE
+        stat[:, 1] = s
+        stat[:, 2] = np.arange(nt)
+        blocks.append(jnp.asarray(stat))
+        rowc = jnp.clip(e.rows, 0, nt * R - 1).astype(jnp.int32)
+        blocks.append(jnp.stack([
+            jnp.full((D,), _DIRTY, jnp.int32),
+            jnp.full((D,), s, jnp.int32),
+            jnp.arange(D, dtype=jnp.int32), rowc], axis=1))
+    for j, ((B, D), (kd, b)) in enumerate(zip(jgeom, probes)):
+        blocks.append(jnp.stack([
+            jnp.full((D,), _PROBE, jnp.int32),
+            jnp.full((D,), j, jnp.int32),
+            jnp.arange(D, dtype=jnp.int32), b], axis=1))
+    sdesc = jnp.concatenate(blocks, axis=0)
+    N = int(sdesc.shape[0])
+
+    # ---- block specs: owners address real blocks, others park ---------
+    def own(d, i, k, o):
+        return (d[i, 0] == k) & (d[i, 1] == o)
+
+    inputs, in_specs = [], []
+    for s, ((C, Q, A, R, nt, D), (cols_p, valid_p)) in enumerate(
+            zip(sgeom, padded)):
+        e = scan_in[s]
+        inputs += [cols_p, cols_p, valid_p, valid_p, e.lo, e.hi, e.lo_p,
+                   e.hi_p]
+        in_specs += [
+            pl.BlockSpec((C, R), lambda i, d, s=s, nt=nt: (
+                0, jnp.where(own(d, i, _PANE, s), d[i, 2], 0))),
+            pl.BlockSpec((C, 1), lambda i, d, s=s: (
+                0, jnp.where(own(d, i, _DIRTY, s), d[i, 3], 0))),
+            pl.BlockSpec((R,), lambda i, d, s=s: (
+                jnp.where(own(d, i, _PANE, s), d[i, 2], 0),)),
+            pl.BlockSpec((1,), lambda i, d, s=s: (
+                jnp.where(own(d, i, _DIRTY, s), d[i, 3], 0),)),
+            pl.BlockSpec((C, Q), lambda i, d: (0, 0)),
+            pl.BlockSpec((C, Q), lambda i, d: (0, 0)),
+            pl.BlockSpec((C, 32 * A), lambda i, d: (0, 0)),
+            pl.BlockSpec((C, 32 * A), lambda i, d: (0, 0)),
+        ]
+    for j, ((B, D), (kd, b)) in enumerate(zip(jgeom, probes)):
+        e = join_in[j]
+        inputs += [kd, e.bkeys, e.brows]
+        in_specs += [
+            pl.BlockSpec((1,), lambda i, d, j=j: (
+                jnp.where(own(d, i, _PROBE, j), d[i, 2], 0),)),
+            pl.BlockSpec((1, B), lambda i, d, j=j: (
+                jnp.where(own(d, i, _PROBE, j), d[i, 3], 0), 0)),
+            pl.BlockSpec((1, B), lambda i, d, j=j: (
+                jnp.where(own(d, i, _PROBE, j), d[i, 3], 0), 0)),
+        ]
+
+    out_specs, out_shapes = [], []
+    for s, (C, Q, A, R, nt, D) in enumerate(sgeom):
+        # one spare (garbage) tile / slot past the real extent parks
+        # every non-owning program's write window
+        out_specs.append(pl.BlockSpec((R, A), lambda i, d, s=s, nt=nt: (
+            jnp.where(own(d, i, _PANE, s), d[i, 2], nt), 0)))
+        out_shapes.append(
+            jax.ShapeDtypeStruct(((nt + 1) * R, A), jnp.uint32))
+        out_specs.append(pl.BlockSpec((1, Q // 32), lambda i, d, s=s,
+                                      D=D: (
+            jnp.where(own(d, i, _DIRTY, s), d[i, 2], D), 0)))
+        out_shapes.append(
+            jax.ShapeDtypeStruct((D + 1, Q // 32), jnp.uint32))
+    for j, (B, D) in enumerate(jgeom):
+        out_specs.append(pl.BlockSpec((1,), lambda i, d, j=j, D=D: (
+            jnp.where(own(d, i, _PROBE, j), d[i, 2], D),)))
+        out_shapes.append(jax.ShapeDtypeStruct((D + 1,), jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(N,), in_specs=in_specs,
+        out_specs=out_specs)
+    outs = pl.pallas_call(
+        functools.partial(_mega_kernel, sgeom=tuple(sgeom),
+                          jgeom=tuple(jgeom)),
+        grid_spec=grid_spec, out_shape=out_shapes,
+        interpret=interpret)(sdesc, *inputs)
+
+    # ---- XLA epilogue: merge into the carries (no intermediates leave
+    # the op; sentinel rows drop in the bounds-checked scatter) ---------
+    words = []
+    for s, ((C, Q, A, R, nt, D), e) in enumerate(zip(sgeom, scan_in)):
+        T = e.cols.shape[1]
+        pane = outs[2 * s][:T]                            # [T, A]
+        m = jnp.where(e.span > 0,
+                      jax.lax.dynamic_update_slice(e.carry, pane,
+                                                   (0, e.w0)),
+                      e.carry)
+        words.append(scatter_dirty_rows(m, e.rows, outs[2 * s + 1][:D],
+                                        T))
+    rids = []
+    for j, ((B, D), e) in enumerate(zip(jgeom, join_in)):
+        rid_d = outs[2 * len(sgeom) + j][:D]
+        rids.append(scatter_dirty_rows(e.rid_carry, e.rows, rid_d,
+                                       e.keys.shape[0]))
+    return tuple(words), tuple(rids)
+
+
+# ---------------------------------------------------------------------------
+# Absorbed standalone kernels (the chained-fallback surface)
+# ---------------------------------------------------------------------------
+
+
+def _delta_scan_kernel(rows_ref, cols_ref, lo_ref, hi_ref, valid_ref,
+                       out_ref, *, n_cols: int, qcap: int):
+    ok = jnp.ones((1, qcap), jnp.bool_)
+    for c in range(n_cols):
+        x = cols_ref[c, 0]
+        ok &= (x >= lo_ref[c, :][None, :]) & (x <= hi_ref[c, :][None, :])
+    ok &= valid_ref[0]
+    out_ref[...] = _pack_bits(ok)
+
+
+def delta_scan_pallas(cols, lo, hi, valid, rows, *, interpret: bool = True):
+    """Dirty-row delta scan (contract: kernels/ref.delta_scan_ref).
+
+    grid = (D,), one program per dirty-row slot; the BlockSpec index_map
+    reads the scalar-prefetched row id to DMA exactly that column of
+    cols.  Work is O(D * C * Q) — independent of the table size.  This
+    is the fused kernel's DIRTY program as a standalone call (the
+    chained ``OperatorBackend.scan_delta`` fallback).
+    """
+    C, T = cols.shape
+    Q = lo.shape[1]
+    D = rows.shape[0]
+    assert Q % 32 == 0
+    W = Q // 32
+    kernel = functools.partial(_delta_scan_kernel, n_cols=C, qcap=Q)
+
+    def row(i, rows_ref):                    # pad slots clamp in range
+        return jnp.clip(rows_ref[i], 0, T - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(D,),
+        in_specs=[
+            # the scalar-prefetch gather: rows[i] picks the cols column
+            pl.BlockSpec((C, 1), lambda i, rows_ref: (0, row(i, rows_ref))),
+            pl.BlockSpec((C, Q), lambda i, rows_ref: (0, 0)),
+            pl.BlockSpec((C, Q), lambda i, rows_ref: (0, 0)),
+            pl.BlockSpec((1,), lambda i, rows_ref: (row(i, rows_ref),)),
+        ],
+        out_specs=pl.BlockSpec((1, W), lambda i, rows_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((D, W), jnp.uint32),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), cols, lo, hi, valid)
+
+
+def _delta_join_kernel(bidx_ref, kd_ref, bkeys_ref, brows_ref, rid_ref):
+    hit = (bkeys_ref[...] == kd_ref[0]) & (brows_ref[...] >= 0)  # [1, B]
+    rid_ref[0] = jnp.max(jnp.where(hit, brows_ref[...], -1))
+
+
+def delta_join_pallas(keys_l, rows, bucket_keys, bucket_rows, bounds, *,
+                      interpret: bool = True):
+    """Dirty-spine-row partitioned probe (contract:
+    kernels/ref.delta_join_ref).
+
+    grid = (D,), one program per dirty-row slot; the ``searchsorted``
+    bucket routing runs in XLA outside (it needs the key VALUE, which no
+    BlockSpec index_map can see) and the kernel probes the ONE routed
+    bucket pane.  Work is O(D * B) — independent of the spine size.
+    This is the fused kernel's PROBE program as a standalone call (the
+    chained ``OperatorBackend.join_delta`` fallback).
+    """
+    P, B = bucket_keys.shape
+    T = keys_l.shape[0]
+    D = rows.shape[0]
+    safe = jnp.clip(rows, 0, T - 1)
+    kd = keys_l[safe]
+    b = jnp.searchsorted(bounds, kd, side="right").astype(jnp.int32) - 1
+    b = jnp.clip(b, 0, P - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(D,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, bidx_ref: (i,)),
+            # the scalar-prefetch gather: bidx[i] picks the bucket pane
+            pl.BlockSpec((1, B), lambda i, bidx_ref: (bidx_ref[i], 0)),
+            pl.BlockSpec((1, B), lambda i, bidx_ref: (bidx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, bidx_ref: (i,)),
+    )
+    return pl.pallas_call(
+        _delta_join_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((D,), jnp.int32),
+        interpret=interpret,
+    )(b, kd, bucket_keys, bucket_rows)

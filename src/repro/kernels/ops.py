@@ -53,6 +53,13 @@ def shared_groupby(group_code, values, mask, n_groups: int):
     return _ref.shared_groupby_ref(group_code, values, mask, n_groups)
 
 
+def fused_delta(scan_in, join_in):
+    if _backend() == "pallas":
+        from repro.kernels.fused_delta import fused_delta_pallas
+        return fused_delta_pallas(scan_in, join_in, interpret=_interpret())
+    return _ref.fused_delta_ref(scan_in, join_in)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
     if _backend() == "pallas":
         from repro.kernels.flash_attention import flash_attention_pallas

@@ -61,6 +61,55 @@ def delta_join_ref(keys_l, rows, bucket_keys, bucket_rows, bounds):
     return jnp.max(jnp.where(hit, bucket_rows[b], -1), axis=1)
 
 
+def fused_delta_ref(scan_in, join_in):
+    """Whole-delta-beat oracle (backends.OperatorBackend.fused_delta).
+
+    ``scan_in``/``join_in`` are tuples of backends.FusedScanIn /
+    FusedJoinIn.  Per scan stage: merge the admission pane (an in-place
+    dynamic_update_slice of a pane-width ``clockscan_ref``) and the
+    dirty rows (``delta_scan_ref`` + sorted-unique scatter) into the
+    carried words; per carried join: merge the dirty spine rows'
+    one-bucket probe (``delta_join_ref``) into the carried rids.
+
+    Unlike the chained ops, each phase runs under a ``lax.cond`` on its
+    host-free emptiness scalar (``span``/``dn``): a steady-state trickle
+    beat typically changes ONE stage's admission and dirties ONE table,
+    so every other stage's pane recompute and dirty rescan — exact
+    identities on the carry — are skipped outright instead of recomputed
+    and rewritten.  The conds branch on replicated/shard-local scalars,
+    never introducing a collective (the sharded delta beat's locality
+    contract, tests/test_sharding_locality.py).
+    """
+    from repro.core.storage import scatter_dirty_rows
+
+    words = []
+    for e in scan_in:
+        T = e.cols.shape[1]
+        m = jax.lax.cond(
+            e.span > 0,
+            lambda c, e=e: jax.lax.dynamic_update_slice(
+                c, clockscan_ref(e.cols, e.lo_p, e.hi_p, e.valid),
+                (0, e.w0)),
+            lambda c: c, e.carry)
+        m = jax.lax.cond(
+            e.dn > 0,
+            lambda mm, e=e: scatter_dirty_rows(
+                mm, e.rows,
+                delta_scan_ref(e.cols, e.lo, e.hi, e.valid, e.rows), T),
+            lambda mm: mm, m)
+        words.append(m)
+    rids = []
+    for e in join_in:
+        rids.append(jax.lax.cond(
+            e.dn > 0,
+            lambda r, e=e: scatter_dirty_rows(
+                r, e.rows,
+                delta_join_ref(e.keys, e.rows, e.bkeys, e.brows,
+                               e.bounds), e.keys.shape[0]),
+            lambda r: r, e.rid_carry))
+    return tuple(words), tuple(rids)
+
+
 def bitmask_join_ref(keys_l, mask_l, keys_r, mask_r, valid_r):
     """Block shared join oracle; right keys UNIQUE among valid rows.
 

@@ -132,6 +132,64 @@ def roofline_terms(flops: float, bytes_accessed: float,
     return terms
 
 
+def fused_delta_footprint(lowered, shards: int = 1) -> Dict:
+    """Analytic per-beat footprint of the fused delta mega-kernel.
+
+    Counts the bytes moved and integer compare-ops one steady-state
+    delta beat pays through ``backend.fused_delta``, from the lowered
+    plan's static geometry (worst case: every stage's admission pane at
+    its full ``delta_words`` span and every dirty set at ``dirty_cap``).
+    Three phases per the kernel contract (kernels/fused_delta.py):
+
+      pane   — re-admit ALL T rows against the A-word changed pane:
+               reads cols [C,T] + pane bounds [C, 32A]x2, read-merges
+               the [T, A] carry slice; 2*T*C*32A compares.
+      dirty  — re-scan the D dirty rows against the FULL Q-slot window:
+               reads [C,D] gathered cols + [C,Q] bounds x2, scatters
+               [D, Q/32] words; 2*D*C*Q compares.
+      probe  — each dirty spine row probes ONE bucket pane of width B:
+               reads D keys + [D,B] bucket keys/rows, scatters D rids;
+               2*D*B compares.
+
+    ``shards`` divides the row-proportional terms (T and D are
+    shard-local under the row mesh; probe sides are replicated).
+    Feeds ``roofline_terms`` so BENCH_PR6.json can report whether the
+    fused beat is memory- or compute-bound on the target part.
+    """
+    schemas = lowered.plan.catalog.schemas
+    bytes_total, iops_total, per_stage = 0.0, 0.0, []
+    for st in lowered.scans:
+        if not st.cols or not st.covered.any():
+            continue
+        C, Q, A = len(st.cols), st.q_window, st.delta_words
+        T = -(-schemas[st.table].capacity // shards)
+        D = min(schemas[st.table].dirty_cap, T)
+        b = (T * C * 4 + 2 * C * A * 32 * 4 + 2 * T * A * 4
+             + D * C * 4 + 2 * C * Q * 4 + D * (Q // 32) * 8)
+        i = 2.0 * T * C * A * 32 + 2.0 * D * C * Q
+        per_stage.append({"stage": f"scan:{st.table}", "bytes": b,
+                          "int_ops": i})
+        bytes_total, iops_total = bytes_total + b, iops_total + i
+    for j in lowered.joins:
+        if j.kind == "gather":
+            continue
+        D = min(schemas[j.spine].dirty_cap,
+                -(-schemas[j.spine].capacity // shards))
+        B = j.bucket_cap if j.kind == "partitioned" \
+            else schemas[j.pk_table].capacity
+        b = D * 4 + D * B * 8 + D * 8
+        i = 2.0 * D * B
+        per_stage.append({"stage": f"probe:{j.spine}->{j.pk_table}",
+                          "bytes": b, "int_ops": i})
+        bytes_total, iops_total = bytes_total + b, iops_total + i
+    terms = roofline_terms(iops_total, bytes_total, 0.0, max(shards, 1))
+    return {"per_stage": per_stage, "bytes": float(bytes_total),
+            "int_ops": float(iops_total),
+            "arith_intensity": iops_total / max(bytes_total, 1.0),
+            "dominant": terms["dominant"],
+            "roofline_fraction": terms["roofline_fraction"]}
+
+
 def model_flops(cfg, shape) -> float:
     """Analytic MODEL_FLOPS: 6*N*D train, 2*N*D inference (D = tokens).
 

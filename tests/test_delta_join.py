@@ -21,7 +21,7 @@ from repro.core.storage import (TableSchema, UpdateSlots, apply_updates,
                                 empty_update_batch,
                                 refresh_key_partitions)
 from repro.kernels import ref
-from repro.kernels.delta_join import delta_join_pallas
+from repro.kernels.fused_delta import delta_join_pallas
 from repro.workloads import tpcw
 
 INT_MAX = tpcw.INT_MAX

@@ -18,7 +18,7 @@ from repro.core.storage import (Catalog, TableSchema, UpdateSlots,
                                 apply_updates, bulk_load,
                                 empty_update_batch)
 from repro.kernels import ref
-from repro.kernels.delta_scan import delta_scan_pallas
+from repro.kernels.fused_delta import delta_scan_pallas
 from repro.workloads import tpcw
 
 
