@@ -19,7 +19,10 @@ so the single-device records above stay undisturbed) and
 ``BENCH_PR6.json`` (the fused delta-heartbeat record: fused vs chained
 steady-state beat with per-phase wall breakdown + launch counts, the
 analytic fused-beat roofline footprint, and the end-to-end
-sharded/single delta-beat ratio).
+sharded/single delta-beat ratio) and ``BENCH_PR8.json`` (the dynamic
+plan-folding serving record: steady-state delta beat vs beats served
+while a background fold builds the extended plan — gated within 1.5x —
+plus the migration-beat wall and the post-fold fused steady beat).
 ``tests/test_sla_gate.py`` fails the build when any record regresses
 past its stored thresholds — including when a record or row goes
 missing.
@@ -40,6 +43,34 @@ BENCH_PR5_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                               os.pardir, "BENCH_PR5.json")
 BENCH_PR6_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                               os.pardir, "BENCH_PR6.json")
+BENCH_PR8_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              os.pardir, "BENCH_PR8.json")
+
+
+def write_bench_pr8(smoke: bool) -> dict:
+    """The dynamic plan-folding serving record: steady-state delta beat
+    wall vs beats served WHILE a background fold builds the extended
+    plan (the gate holds the ratio within 1.5x — folding must not stall
+    the world), plus the single migration-beat wall and the post-fold
+    steady beat back on the fused single launch."""
+    from benchmarks import fold_bench
+    record = {"pr": 8, "mode": "smoke" if smoke else "full",
+              "fold": fold_bench.run(smoke=smoke)}
+    path = os.path.abspath(BENCH_PR8_JSON)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    fo = record["fold"]
+    print(f"== Plan folding -> {path} ==", flush=True)
+    print(f"steady delta beat {fo['steady_us']:.0f}us vs "
+          f"{fo['during_fold_us']:.0f}us during the background fold "
+          f"(ratio {fo['fold_serving_ratio']:.3f}; "
+          f"{fo['beats_during_build']} beats served while the extended "
+          f"plan built for {fo['build_wall_s']:.1f}s); migration beat "
+          f"{fo['migration_beat_us']:.0f}us; post-fold steady "
+          f"{fo['post_steady_us']:.0f}us "
+          f"({fo['post_fold_launches']} launches)", flush=True)
+    return record
 
 
 def write_bench_pr6(smoke: bool, pr5_record: dict) -> dict:
@@ -183,6 +214,7 @@ def write_bench_json(smoke: bool) -> dict:
 
     record5 = write_bench_pr5(smoke)
     write_bench_pr6(smoke, record5)
+    write_bench_pr8(smoke)
     return record
 
 

@@ -1,0 +1,178 @@
+"""Dynamic plan folding: admit new query templates into the running
+shared plan without stopping the world (GraftDB-style folding on top of
+the paper's always-on plan).
+
+SharedDB compiles ONE global plan at startup, which freezes the template
+set — a tenant with a novel query shape would have no path in.  Folding
+re-compiles an EXTENDED plan (new templates appended; every existing
+template keeps its slot range and every existing stage keeps its
+position — ``extend_plan`` + ``lowering.check_extension_prefix`` enforce
+this) in the background while the OLD compiled heartbeat keeps serving,
+then swaps the compiled-cycle handle atomically at a beat boundary:
+
+  1. ``begin_fold``   — validate the extension, start the background
+                        re-lower + compile (the old plan keeps beating;
+                        the elastic drain -> re-lower -> resume recipe of
+                        runtime/elastic.py, run in its ``background``
+                        variant);
+  2. migration beat   — at the next dispatch after the new handle is
+                        ready: drain in-flight beats, install the new
+                        handle, width-extend the carries into the new
+                        per-stage windows (``migrate_carry``) and
+                        version the swap through the executor's
+                        ``_layout_token`` / ``_carry_token`` pair;
+  3. reseed beat      — the FIRST post-fold heartbeat is a forced full
+                        rescan, which reseeds both carry halves under
+                        the new layout; from then on the engine is
+                        indistinguishable from a cold engine compiled
+                        with the extended template set (the differential
+                        suite proves ticket-for-ticket parity).
+
+Carry-migration contract
+------------------------
+The carried scan words are positional in the admission layout: word
+window [wlo, whi) of each stage, bit q = "row matches slot q".  Slots a
+fold appends have never been admitted, and an un-admitted slot's
+predicate binds to (INT_MAX, INT_MIN) — no row matches — so its carried
+bits are exactly 0: width-extending a stage's words is a zero-pad on the
+high side.  Key partitions depend only on the PK snapshot + partition
+geometry (unchanged: same catalog, same measured key stats), and rid
+arrays depend only on the spine fk column + PK snapshot — both pass
+through untouched.  Any half the fold cannot prove migrable (a table
+newly predicated, a new join stage) is returned as ``None`` and reseeds
+instead; the forced full-rescan beat makes either route exact.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.lowering import LoweredPlan, check_extension_prefix
+from repro.core.plan import CompiledPlan, QueryTemplate, compile_plan
+
+
+class FoldError(ValueError):
+    """A requested fold cannot preserve the running plan as a prefix."""
+
+
+def extend_plan(plan: CompiledPlan, new_templates: List[QueryTemplate],
+                new_caps: Dict[str, int]) -> CompiledPlan:
+    """Recompile ``plan`` with ``new_templates`` APPENDED.
+
+    The extension is validated prefix-stable: every existing template
+    keeps its (offset, cap) slot range, the global capacity only grows,
+    and every shared node keeps its position (new subscribers join
+    existing nodes; genuinely new nodes append at the end).  New
+    templates may only reference tables the catalog already holds —
+    folding registers QUERY shapes, not schema changes, so the table
+    snapshots never migrate.
+    """
+    for t in new_templates:
+        if t.name in plan.templates:
+            raise FoldError(f"template {t.name!r} already in the plan")
+        if t.name not in new_caps or new_caps[t.name] < 1:
+            raise FoldError(f"template {t.name!r} needs a positive cap")
+        for table in t.tables():
+            if table not in plan.catalog.schemas:
+                raise FoldError(
+                    f"template {t.name!r} references unknown table "
+                    f"{table!r} — folding admits new query shapes, not "
+                    "new tables")
+        for p in t.preds:
+            if p.table not in plan.catalog.schemas or \
+                    p.col not in plan.catalog.schemas[p.table].columns:
+                raise FoldError(
+                    f"template {t.name!r} predicate on unknown column "
+                    f"{p.table}.{p.col}")
+    names = {t.name for t in new_templates}
+    if len(names) != len(new_templates):
+        raise FoldError("duplicate template names in the fold batch")
+
+    merged = list(plan.templates.values()) + list(new_templates)
+    caps = dict(plan.caps)
+    caps.update({t.name: int(new_caps[t.name]) for t in new_templates})
+    extended = compile_plan(plan.catalog, merged, caps,
+                            max_results=plan.max_results,
+                            union_cap=plan.union_cap,
+                            group_union_cap=plan.group_union_cap)
+    _check_plan_prefix(plan, extended)
+    return extended
+
+
+def _check_plan_prefix(old: CompiledPlan, new: CompiledPlan) -> None:
+    """Prefix-stability at the PLAN level (the IR level is re-checked by
+    ``lowering.check_extension_prefix`` after the extended plan lowers)."""
+    for name in old.templates:
+        if new.offsets.get(name) != old.offsets[name] or \
+                new.caps.get(name) != old.caps[name]:
+            raise FoldError(
+                f"slot range of existing template {name!r} moved "
+                f"({old.offsets[name]}+{old.caps[name]} -> "
+                f"{new.offsets.get(name)}+{new.caps.get(name)})")
+    if new.qcap < old.qcap:
+        raise FoldError(f"qcap shrank ({old.qcap} -> {new.qcap})")
+    old_scan_keys = list(old.scans)
+    if list(new.scans)[:len(old_scan_keys)] != old_scan_keys:
+        raise FoldError("scan node order changed")
+    for table in old_scan_keys:
+        oc, nc = old.scans[table].cols, new.scans[table].cols
+        if tuple(nc[:len(oc)]) != tuple(oc):
+            raise FoldError(f"scan {table!r} columns reordered")
+    ok = [(j.spine, j.fk_col, j.pk_table) for j in old.joins]
+    if [(j.spine, j.fk_col, j.pk_table)
+            for j in new.joins[:len(ok)]] != ok:
+        raise FoldError("join node order changed")
+    osk = [(s.spine, s.col, s.desc) for s in old.sorts]
+    if [(s.spine, s.col, s.desc) for s in new.sorts[:len(osk)]] != osk:
+        raise FoldError("sort node order changed")
+    ogk = [(g.spine, g.agg.group_col, g.agg.agg_col) for g in old.groups]
+    if [(g.spine, g.agg.group_col, g.agg.agg_col)
+            for g in new.groups[:len(ogk)]] != ogk:
+        raise FoldError("group node order changed")
+
+
+def migrate_carry(old: LoweredPlan, new: LoweredPlan, carry,
+                  rid_carry) -> Tuple[Optional[dict], Optional[dict]]:
+    """Remap the executor's carries from ``old``'s layout into ``new``'s.
+
+    Returns ``(carry', rid_carry')``; either half is ``None`` when it
+    must be RE-SEEDED instead (the full-rescan beat regenerates both, so
+    a ``None`` is always safe — never wrong, just not incremental).
+
+    * scan words — zero-padded on the high (appended-slot) side into
+      each surviving stage's new window; appended slots were never
+      admitted, and un-admitted slots match no rows, so zero is their
+      exact carried value.  A table that gains its FIRST predicated
+      column has no old words to extend -> reseed.
+    * key partitions — pass through verbatim when the fold adds no join
+      stages (same partitioned PK set, same geometry — enforced by
+      ``check_extension_prefix``); a new join stage may demand
+      partitions of a table the old beat never partitioned -> reseed.
+    * rid arrays — pass through per surviving join key; any new carried
+      join has no rid history -> reseed the rid half.
+    """
+    check_extension_prefix(old, new)
+    new_carry = None
+    if carry is not None:
+        scan, ok = {}, True
+        old_scan = {s.table: s for s in old.scans if s.cols}
+        for st in new.scans:
+            if not st.cols:
+                continue
+            os = old_scan.get(st.table)
+            if os is None or st.table not in carry["scan"]:
+                ok = False      # newly predicated table: no words to pad
+                break
+            words = carry["scan"][st.table]
+            pad = (st.whi - st.wlo) - (os.whi - os.wlo)
+            scan[st.table] = jnp.pad(words, ((0, 0), (0, pad))) \
+                if pad else words
+        if ok and len(new.joins) == len(old.joins):
+            new_carry = {"scan": scan, "parts": carry["parts"]}
+    new_rids = None
+    if rid_carry is not None:
+        keys = [j.key for j in new.joins if j.kind != "gather"]
+        if keys and all(k in rid_carry for k in keys):
+            new_rids = {k: rid_carry[k] for k in keys}
+    return new_carry, new_rids

@@ -169,6 +169,30 @@ def build_shard_spec(plan: CompiledPlan, mesh: Mesh) -> ShardSpec:
                      commit_rows=commit_rows, plan=padded_plan)
 
 
+def check_fold_mirrors(old_plan: CompiledPlan,
+                       new_plan: CompiledPlan) -> None:
+    """A fold under a mesh must keep the sharded STATE layout fixed.
+
+    Whether a table is mirrored (replicated probe side) or row-sharded
+    is decided by join membership, and the two layouts store different
+    leaves under different shardings — flipping a table would demand a
+    cross-shard state migration mid-serve, and un-mirroring a table
+    would put collectives back into the delta beats its probes ride on.
+    The catalog itself is shared by construction (extend_plan refuses
+    new tables), so padded capacities never move; this check closes the
+    remaining degree of freedom.  Folds that only subscribe to existing
+    joins, or add joins into already-mirrored PK tables, pass.
+    """
+    old_m = {j.pk_table for j in old_plan.joins}
+    new_m = {j.pk_table for j in new_plan.joins}
+    if old_m != new_m:
+        raise ValueError(
+            "fold under a mesh would change the mirrored table set "
+            f"({sorted(old_m ^ new_m)}) — the sharded state layout is "
+            "fixed at startup; register templates whose joins target "
+            "already-mirrored PK tables, or restart to re-shard")
+
+
 # ---------------------------------------------------------------------------
 # State construction
 # ---------------------------------------------------------------------------

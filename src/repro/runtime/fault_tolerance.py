@@ -39,18 +39,30 @@ class HeartbeatBoard:
         self._last: Dict[int, float] = {}
         self._step: Dict[int, int] = {}
         self._durations: Dict[int, List[float]] = {}
+        # expected membership: registration time stands in for the first
+        # beat of a host that never manages one (a host dead on arrival
+        # would otherwise never appear in _last and never be declared dead)
+        self._registered: Dict[int, float] = {}
+
+    def register(self, host: int, now: Optional[float] = None):
+        """Declare a host EXPECTED.  Silence counts from this moment."""
+        self._registered.setdefault(
+            host, now if now is not None else time.time())
 
     def beat(self, host: int, step: int, duration_s: float,
              now: Optional[float] = None):
-        self._last[host] = now if now is not None else time.time()
+        t = now if now is not None else time.time()
+        self._registered.setdefault(host, t)
+        self._last[host] = t
         self._step[host] = step
         self._durations.setdefault(host, []).append(duration_s)
 
     def dead_hosts(self, policy: StragglerPolicy,
                    now: Optional[float] = None) -> List[int]:
         now = now if now is not None else time.time()
-        return [h for h, t in self._last.items()
-                if now - t > policy.dead_after_s]
+        return sorted(
+            h for h, t0 in self._registered.items()
+            if now - self._last.get(h, t0) > policy.dead_after_s)
 
     def stragglers(self, policy: StragglerPolicy) -> List[int]:
         if not self._durations:
@@ -88,6 +100,7 @@ class FaultTolerantLoop:
         self.host_id = host_id
         self.max_restarts = max_restarts
         self.board = HeartbeatBoard()
+        self.board.register(self.host_id)
         self.restarts = 0
 
     def run(self, state, start_step: int, n_steps: int,

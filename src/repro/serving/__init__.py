@@ -1,1 +1,2 @@
 from repro.serving.scheduler import CycleServer, Request  # noqa: F401
+from repro.serving.query_server import QueryCycleServer  # noqa: F401

@@ -1,0 +1,155 @@
+"""Fold differential leg, run under ``python -O`` (CI named step).
+
+Runs the dynamic plan-folding differential — mid-stream registration
+through ``QueryCycleServer``, carry migration, the forced full-rescan
+migration beat, post-fold parity against a COLD engine compiled with
+the final template set — with assert statements STRIPPED.  That is the
+point of the leg: the engine's carry/layout guard and the fold
+admission rules must be real errors (``RuntimeError`` /
+``FoldError``), not asserts, so every check here is an explicit raise.
+
+    PYTHONPATH=src python -O tests/run_fold_differential.py
+"""
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
+import numpy as np  # noqa: E402
+
+from repro.core.executor import SharedDBEngine  # noqa: E402
+from repro.core.plan import compile_plan  # noqa: E402
+from repro.serving import QueryCycleServer  # noqa: E402
+from repro.workloads import tpcw  # noqa: E402
+
+SCALE_I, SCALE_C = 64, 128
+N_BASE = 10
+
+
+def check(cond, msg):
+    if not cond:
+        raise SystemExit(f"FOLD DIFFERENTIAL FAILED: {msg}")
+
+
+def compare(a, b):
+    ra, rb = a.result, b.result
+    check(ra is not None and rb is not None, f"unserved {a.template}")
+    if "rows" in ra:
+        sa = set(int(x) for x in np.asarray(ra["rows"]) if x >= 0)
+        sb = set(int(x) for x in np.asarray(rb["rows"]) if x >= 0)
+        check(sa == sb, f"{a.template} rows {sorted(sa)[:5]} != "
+                        f"{sorted(sb)[:5]}")
+    else:
+        sa = np.sort(np.asarray(ra["scores"]).ravel())
+        sb = np.sort(np.asarray(rb["scores"]).ravel())
+        check(np.allclose(sa, sb, rtol=1e-6), f"{a.template} scores")
+
+
+def run(mesh, tag):
+    catalog = tpcw.make_catalog(SCALE_I, SCALE_C)
+    templates, caps = tpcw.make_templates(
+        catalog.schemas["item"].capacity)
+    base = compile_plan(catalog, templates[:N_BASE],
+                        {t.name: caps[t.name]
+                         for t in templates[:N_BASE]})
+    full = compile_plan(catalog, list(templates), caps)
+
+    def data():
+        return tpcw.generate_data(np.random.default_rng(0),
+                                  SCALE_I, SCALE_C)
+
+    eng = SharedDBEngine(base, tpcw.DEFAULT_UPDATE_SLOTS, data(),
+                         kernels="jnp", mesh=mesh)
+    server = QueryCycleServer(eng, background_folds=False)
+    cold = SharedDBEngine(full, tpcw.DEFAULT_UPDATE_SLOTS, data(),
+                          kernels="jnp", mesh=mesh)
+    pairs = []
+
+    def submit(name, params):
+        pairs.append((server.submit(name, params),
+                      cold.submit(name, params)))
+
+    def update(u):
+        server.submit_update(*u)
+        cold.submit_update(*u)
+
+    def heartbeat():
+        server.heartbeat()
+        cold.run_until_drained()
+        while pairs:
+            compare(*pairs.pop())
+
+    submit("get_book", {0: (5, 5)})
+    submit("search_subject", {0: (2, 2)})
+    heartbeat()
+    for i in range(2):
+        update(("customer", "update", {"key": 3 + i,
+                                       "col": "c_expiration",
+                                       "val": 900 + i}))
+        submit("get_customer", {0: (7 + i, 7 + i)})
+        submit("get_book", {0: (5, 5)})
+        heartbeat()
+    check(eng.delta_cycles >= 1, f"{tag}: no delta beat engaged")
+
+    # register the held-out templates mid-stream, one fold for the batch
+    out = server.register_templates(
+        [(t, caps[t.name]) for t in templates[N_BASE:]])
+    check(all(r["status"] == "folding" for r in out), f"{tag}: {out}")
+    submit("order_lines", {0: (10, 10)})
+    submit("get_cart", {0: (12, 12)})
+    submit("order_display", {0: (9, 9)})
+    heartbeat()
+    check(eng.folds_done == 1, f"{tag}: fold did not commit")
+    check(eng.last_scan_path == "full",
+          f"{tag}: migration beat was {eng.last_scan_path!r}")
+
+    for i in range(3):          # post-fold steady state, slot-stable
+        update(("customer", "update", {"key": 5 + i,
+                                       "col": "c_expiration",
+                                       "val": 40 + i}))
+        submit("order_lines", {0: (20 + i, 20 + i)})
+        submit("get_cart", {0: (12, 12)})
+        submit("get_book", {0: (5, 5)})
+        heartbeat()
+    check(eng.last_scan_path == "delta",
+          f"{tag}: post-fold steady state fell off the delta path")
+    for table in ("item", "customer", "order_line"):
+        got, want = eng.snapshot(table), cold.snapshot(table)
+        for col in base.catalog.schemas[table].columns:
+            check((got[col] == want[col]).all(),
+                  f"{tag}: snapshot {table}.{col}")
+
+    # the carry/layout guard must hold with asserts stripped: repeat
+    # the last steady beat verbatim (delta-eligible) on a stale token
+    eng.submit("order_lines", {0: (22, 22)})
+    eng.submit("get_cart", {0: (12, 12)})
+    eng.submit("get_book", {0: (5, 5)})
+    eng._carry_token = ("stale-layout",)
+    try:
+        eng.dispatch()
+    except RuntimeError:
+        eng._carry_token = eng._layout_token
+    else:
+        raise SystemExit(f"{tag}: stale-carry dispatch did not raise")
+    print(f"fold differential ok [{tag}]", flush=True)
+
+
+def main():
+    if __debug__:
+        raise SystemExit("this leg must run under python -O "
+                         "(assert statements stripped)")
+    from jax.sharding import Mesh
+    import jax
+    run(None, "unsharded")
+    devs = np.array(jax.devices()[:2])
+    with_mesh = Mesh(devs, ("rows",))
+    run(with_mesh, "2-shard mesh")
+    print("FOLD_DIFFERENTIAL_OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

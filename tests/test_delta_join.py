@@ -288,14 +288,16 @@ def test_delta_joins_flag_forces_full_probes(indexless_world):
 
 def test_carry_layout_assertion_refuses_foreign_carry(indexless_world):
     """Satellite audit: a delta heartbeat must never consume a carry
-    produced under a different admission layout."""
+    produced under a different admission layout.  The guard is an
+    always-on RuntimeError (not a strippable assert) so it survives
+    ``python -O`` — plan folding swaps layouts at runtime."""
     plan, data = indexless_world
     eng = SharedDBEngine(plan, tpcw.DEFAULT_UPDATE_SLOTS, data, jit=False)
     eng.submit("get_book", {0: (1, 1)})
     eng.run_cycle()
     eng._carry_token = ("other-layout",)              # simulate re-lower
     eng.submit("get_book", {0: (1, 1)})
-    with pytest.raises(AssertionError, match="admission layout"):
+    with pytest.raises(RuntimeError, match="admission layout"):
         eng.run_cycle()
 
 

@@ -2,12 +2,21 @@
 re-lowers and compiles on the smaller mesh — the drain -> re-mesh ->
 restore recipe of runtime/elastic.py, executed for real.
 
-Runs in a subprocess because the 8-device host-platform flag must be set
-before jax initializes (the test suite itself stays at 1 device).
-"""
+The re-lower test runs in a subprocess because the 8-device
+host-platform flag must be set before jax initializes (the test suite
+itself stays at 1 device).  The unit tests below cover the hardening
+that rode along with plan folding: ladder validation/sorting at
+construction, explicit alive-device meshes, never-beaten-host death,
+and the shared drain -> re-lower -> resume recipe."""
 import subprocess
 import sys
 import textwrap
+
+import jax
+import pytest
+
+from repro.runtime.elastic import ElasticMeshManager, relower_recipe
+from repro.runtime.fault_tolerance import HeartbeatBoard, StragglerPolicy
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -54,3 +63,65 @@ def test_step_relowers_after_mesh_shrink():
                          capture_output=True, text=True, timeout=420,
                          cwd=".")
     assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_elastic_ladder_validated_and_sorted_at_construction():
+    """A hand-built unsorted ladder used to silently under-provision:
+    select() walks in order and took the first FITTING rung, not the
+    largest.  Construction now sorts descending by chip count, so
+    select(4) finds the 4-chip rung even when it was listed last."""
+    mgr = ElasticMeshManager(ladder=[(1, 1, 1), (1, 2, 2), (1, 1, 2)])
+    assert mgr.ladder == [(1, 2, 2), (1, 1, 2), (1, 1, 1)]
+    assert mgr.select(4) == (1, 2, 2)
+    assert mgr.select(2) == (1, 1, 2)
+    for bad in ([(1, 2)], [(1, 2, 0)], [(1, 2, -2)], [(1, 2.5, 2)]):
+        with pytest.raises(ValueError):
+            ElasticMeshManager(ladder=bad)
+
+
+def test_make_mesh_excludes_dead_devices():
+    """make_mesh with an explicit alive-device list must build the mesh
+    from the SURVIVORS — a dead middle device never lands in the mesh
+    (the old jax.devices()[:n] slice would have included it)."""
+    devs = jax.devices()
+    if len(devs) < 8:
+        pytest.skip("needs the 8 forced host devices")
+    dead = devs[1]
+    alive = devs[:1] + devs[2:]
+    mgr = ElasticMeshManager(ladder=[(1, 2, 2), (1, 1, 2), (1, 1, 1)])
+    mesh = mgr.make_mesh((1, 1, 2), devices=alive)
+    assert dead not in mesh.devices.ravel().tolist()
+    assert mesh.devices.ravel().tolist() == alive[:2]
+    with pytest.raises(RuntimeError):            # survivors too few
+        mgr.make_mesh((1, 2, 2), devices=devs[:3])
+
+
+def test_never_beaten_host_declared_dead():
+    """A host that registered but NEVER beat must go dead after
+    ``dead_after_s`` of silence — the old board only tracked hosts it
+    had heard from, so a node that wedged before its first heartbeat
+    was invisible to failure detection forever."""
+    pol = StragglerPolicy(dead_after_s=60.0)
+    board = HeartbeatBoard()
+    board.register(0, now=0.0)
+    board.register(7, now=0.0)                   # wedges before beat 1
+    board.beat(0, step=0, duration_s=1.0, now=50.0)
+    assert board.dead_hosts(pol, now=59.0) == []
+    assert board.dead_hosts(pol, now=70.0) == [7]
+    assert board.dead_hosts(pol, now=200.0) == [0, 7]
+
+
+def test_relower_recipe_background_variant():
+    """The recipe behind SharedDBEngine.begin_fold: the background
+    variant re-lowers while the old heartbeat serves and resumes with a
+    full-rescan reseed; the foreground variant keeps the elastic shrink
+    steps verbatim."""
+    r = relower_recipe(("a", "b"), ("a", "b", "c"),
+                       what="the extended always-on plan",
+                       background=True)
+    assert r["current"] == ("a", "b") and r["target"] == ("a", "b", "c")
+    steps = " / ".join(r["steps"])
+    assert "background" in steps and "old compiled heartbeat" in steps
+    assert "migrate carries" in steps and "full-rescan reseed" in steps
+    fg = relower_recipe((2, 16, 16), (1, 16, 16), what="step")
+    assert "background" not in " / ".join(fg["steps"])

@@ -128,6 +128,10 @@ def test_elastic_mesh_ladder():
         mgr.select(0)
 
 
+# ladder validation / explicit alive-device meshes / never-beaten-host
+# death live in tests/test_elastic_relower.py (no hypothesis needed)
+
+
 # --------------------------------------------------------------- optimizer
 def test_adamw_descends_quadratic():
     cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
