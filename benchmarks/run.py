@@ -5,7 +5,9 @@ incremental-scan / incremental-join / sharded-reseed records.
 
     python -m benchmarks.run [--quick]   # figures + BENCH_PR3/4/5.json
     python -m benchmarks.run --smoke     # machine-readable records only
-                                         # (the CI cycle-time SLA gate)
+                                         # (the CI cycle-time SLA gate);
+                                         # refuses to overwrite committed
+                                         # BENCH_PR*.json without --force
 
 Every invocation (re)writes the machine-readable perf trajectory:
 ``BENCH_PR3.json`` (per-heartbeat cycle time, host dispatch/staging
@@ -218,11 +220,34 @@ def write_bench_json(smoke: bool) -> dict:
     return record
 
 
+def _existing_bench_records():
+    """Committed BENCH_PR*.json records a --smoke run would overwrite."""
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        os.pardir)
+    return sorted(
+        os.path.abspath(os.path.join(root, f))
+        for f in os.listdir(root)
+        if f.startswith("BENCH_PR") and f.endswith(".json"))
+
+
 def main() -> None:
     quick = "--quick" in sys.argv
     t_start = time.time()
 
     if "--smoke" in sys.argv:
+        # a smoke run writes the SAME BENCH_PR*.json paths as a full
+        # run — silently clobbering committed full-mode records with
+        # smoke-mode numbers poisons every later comparison.  Refuse
+        # unless explicitly forced.
+        existing = _existing_bench_records()
+        if existing and "--force" not in sys.argv:
+            print("refusing to overwrite committed bench records with "
+                  "smoke-mode numbers:", file=sys.stderr)
+            for p in existing:
+                print(f"  {p}", file=sys.stderr)
+            print("re-run with --force to overwrite them anyway",
+                  file=sys.stderr)
+            raise SystemExit(2)
         write_bench_json(smoke=True)
         print(f"total bench wall: {time.time() - t_start:.0f}s", flush=True)
         return

@@ -1,0 +1,44 @@
+"""planlint: static plan / jaxpr / kernel verification for the shared
+heartbeat.
+
+SharedDB's value proposition is *predictability*: one always-on plan
+whose per-beat cost is bounded by construction.  The invariants that
+boundedness rests on — disjoint admission slot ranges, in-window scatter
+plans, partition geometry wide enough for the measured key skew,
+prefix-stable folds, shard-local delta beats, no full-width compare on
+the steady-state path, carries donated exactly once — used to be
+enforced piecemeal (runtime guards here, a hand-built jaxpr test
+there).  This package turns each of them into a named lint rule that a
+single analyzer proves for ANY lowered plan:
+
+  * ``ir_passes``     — structural checks over ``CompiledPlan`` + the
+                        staged lowering IR (``LoweredPlan``), including
+                        the fold-admission and prefix-stability rules
+                        that ``folding.extend_plan`` and
+                        ``SharedDBEngine.begin_fold`` route through.
+                        Cheap: run always-on at engine construction and
+                        at every fold commit.
+  * ``jaxpr_passes``  — walk the closed jaxprs of the full/delta/fused
+                        beats: collective detector, width classifier,
+                        donation/alias checker.
+  * ``kernel_passes`` — static validation of the fused mega-kernel's
+                        scalar-prefetched schedule (coverage, gather
+                        bounds, grid length, garbage-tile parking).
+  * ``source_passes`` — ``no-bare-assert``: hot-path modules must guard
+                        with real raises, never ``assert`` (stripped
+                        under ``python -O``).
+
+``python -m repro.analysis_static.lint`` sweeps workloads x backends x
+shard counts and exits non-zero on any error-severity finding; the
+seeded mutation corpus under ``tests/lint_corpus/`` proves each rule
+actually fires.
+"""
+from repro.analysis_static.diagnostics import (LintFinding, PlanLintError,
+                                               errors_in, format_findings,
+                                               raise_on_error)
+from repro.analysis_static.registry import RULES, Rule, all_rules
+
+__all__ = [
+    "LintFinding", "PlanLintError", "errors_in", "format_findings",
+    "raise_on_error", "RULES", "Rule", "all_rules",
+]

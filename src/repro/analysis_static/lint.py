@@ -1,0 +1,223 @@
+"""planlint CLI: prove heartbeat invariants before the first beat.
+
+    python -m repro.analysis_static.lint                       # full sweep
+    python -m repro.analysis_static.lint --rules               # rule table
+    python -m repro.analysis_static.lint --workloads tpcw \\
+        --backends jnp,pallas --shards 1,2,4                   # CI leg
+
+Sweeps workload plans x operator backends x shard counts and runs every
+pass family against the REAL lowered plan and the REAL traced cycle
+flavours — nothing executes on device (full beats are shape-evaluated,
+delta beats are traced to jaxprs), so the whole sweep is tracing cost
+only.  Exit status 1 iff any error-severity finding survives.
+"""
+from __future__ import annotations
+
+import os
+
+
+def _force_cpu_mesh() -> None:
+    """Give the sweep 8 host devices BEFORE jax initializes (same trick
+    as tests/conftest.py), so the sharded legs have a mesh to lint."""
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+
+
+_force_cpu_mesh()
+
+import argparse  # noqa: E402
+import sys  # noqa: E402
+from typing import List  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.analysis_static.diagnostics import (LintFinding, errors_in,  # noqa: E402
+                                               format_findings)
+from repro.analysis_static import ir_passes, jaxpr_passes  # noqa: E402
+from repro.analysis_static import kernel_passes, source_passes  # noqa: E402
+from repro.analysis_static.registry import PASSES, all_rules  # noqa: E402
+
+WORKLOADS = ("tpcw", "tpcw-nopk")
+
+
+def _struct(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype)
+        if not isinstance(x, jax.ShapeDtypeStruct) else x, tree)
+
+
+def _build_plan(workload: str, scale_i: int, scale_c: int):
+    from repro.workloads import tpcw
+    plan = tpcw.build_tpcw_plan(
+        scale_i, scale_c, dense_pk_index=(workload == "tpcw"))
+    data = tpcw.generate_data(np.random.default_rng(0), scale_i, scale_c)
+    return plan, data
+
+
+def lint_config(workload: str, backend_name: str, n_shards: int,
+                scale_i: int, scale_c: int) -> List[LintFinding]:
+    """All pass families against one (workload, backend, shards) cell."""
+    import repro.kernels  # noqa: F401  (registers the pallas backend)
+    from repro.core import backends
+    from repro.core.executor import DONATION_SPEC, _measure_key_stats
+    from repro.core.lowering import (build_cycle, build_delta_cycle,
+                                     lower_plan)
+    from repro.core.storage import empty_update_batch
+    from repro.workloads import tpcw
+
+    cfg = f"{workload}/{backend_name}/shards={n_shards or 'off'}"
+    plan, data = _build_plan(workload, scale_i, scale_c)
+    key_stats = _measure_key_stats(plan, data)
+    lowered = lower_plan(plan, key_stats=key_stats)
+
+    # ---- IR family (the always-on bundle, here surfaced as findings)
+    findings = (ir_passes.lint_slot_layout(plan)
+                + ir_passes.lint_word_windows(lowered)
+                + ir_passes.lint_partition_geometry(lowered, key_stats))
+
+    # ---- kernel family (fused-delta grid geometry; backend-independent)
+    findings += kernel_passes.run_kernel_passes(lowered, location=cfg)
+
+    # ---- build the three cycle flavours exactly as the executor does
+    be = backends.get_backend(backend_name)
+    spec = None
+    if n_shards:
+        from repro.core.sharding import (build_shard_spec,
+                                         build_sharded_cycle,
+                                         build_sharded_delta_cycle,
+                                         init_sharded_state,
+                                         make_row_mesh)
+        if jax.device_count() < n_shards:
+            findings.append(LintFinding(
+                jaxpr_passes.R.JAXPR_DELTA_COLLECTIVE,
+                f"skipped: {n_shards} shards > {jax.device_count()} "
+                "devices", severity="warning", location=cfg))
+            return findings
+        mesh = make_row_mesh(n_shards)
+        spec = build_shard_spec(plan, mesh)
+        full = build_sharded_cycle(lowered, be, spec)
+        delta = build_sharded_delta_cycle(lowered, be, spec)
+        delta_j = build_sharded_delta_cycle(lowered, be, spec,
+                                            delta_joins=True)
+        state = init_sharded_state(spec, data)
+    else:
+        full = build_cycle(lowered, be)
+        delta = build_delta_cycle(lowered, be)
+        delta_j = build_delta_cycle(lowered, be, delta_joins=True)
+        state = plan.catalog.init_state(data)
+
+    slots = tpcw.DEFAULT_UPDATE_SLOTS
+    queries = {
+        "params": np.zeros((plan.qcap, plan.n_params_max, 2), np.int32),
+        "active": np.zeros((plan.qcap,), bool)}
+    updates = {t: empty_update_batch(s, slots, xp=np)
+               for t, s in plan.catalog.schemas.items()}
+    state_s, queries_s, updates_s = map(_struct,
+                                        (state, queries, updates))
+
+    # shape-evaluate the full beat (no execution) to recover the carry
+    # and results layouts the delta flavours consume
+    state2_s, carry_s, results_s = jax.eval_shape(full, state_s,
+                                                  queries_s, updates_s)
+    queries_d = dict(queries_s,
+                     changed=jax.ShapeDtypeStruct((plan.qcap,), bool))
+    args_full = (state_s, queries_s, updates_s)
+    args_delta = (state2_s, carry_s, queries_d, updates_s)
+    args_dj = (state2_s, carry_s, results_s["_join_rids"], queries_d,
+               updates_s)
+
+    # ---- jaxpr family: collectives + width, per delta flavour
+    jd = jax.make_jaxpr(delta)(*args_delta)
+    jdj = jax.make_jaxpr(delta_j)(*args_dj)
+    findings += jaxpr_passes.lint_delta_collectives(
+        jd, location=f"{cfg} delta")
+    findings += jaxpr_passes.lint_delta_collectives(
+        jdj, location=f"{cfg} delta_join")
+    findings += jaxpr_passes.lint_delta_width(
+        jd, lowered, spec, location=f"{cfg} delta")
+    findings += jaxpr_passes.lint_delta_width(
+        jdj, lowered, spec, delta_joins=True, update_slots=slots,
+        location=f"{cfg} delta_join")
+    if spec is not None:
+        jf = jax.make_jaxpr(full)(*args_full)
+        findings += jaxpr_passes.lint_reseed_collectives(
+            jf, lowered, spec, location=f"{cfg} full")
+
+    # ---- donation contract: the executor's shipped spec against the
+    # aliasing the lowering actually emits
+    aliased = {
+        "full": {1: "staged queries", 2: "staged updates"},
+        "delta": {2: "staged queries", 3: "staged updates"},
+        "delta_join": {2: "rid carry (aliases the previous beat's "
+                          "in-flight results)",
+                       3: "staged queries", 4: "staged updates"}}
+    for flavour, fn, args in (("full", full, args_full),
+                              ("delta", delta, args_delta),
+                              ("delta_join", delta_j, args_dj)):
+        findings += jaxpr_passes.lint_donation(
+            fn, args, DONATION_SPEC[flavour], aliased[flavour],
+            location=f"{cfg} {flavour}")
+    return findings
+
+
+def _print_rules() -> None:
+    print(f"{'rule id':<26} {'family':<7} summary")
+    for r in all_rules():
+        print(f"{r.id:<26} {r.family:<7} {r.summary}")
+    print(f"\n{len(all_rules())} rules across "
+          f"{len(PASSES)} registered passes")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis_static.lint",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--workloads", default=",".join(WORKLOADS),
+                    help="comma list from: " + ", ".join(WORKLOADS))
+    ap.add_argument("--backends", default="jnp,pallas")
+    ap.add_argument("--shards", default="0,1,2,4",
+                    help="comma list of shard counts (0 = unsharded)")
+    ap.add_argument("--scale-items", type=int, default=64)
+    ap.add_argument("--scale-customers", type=int, default=128)
+    ap.add_argument("--rules", action="store_true",
+                    help="print the rule table and exit")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also print warning/info findings")
+    args = ap.parse_args(argv)
+    if args.rules:
+        _print_rules()
+        return 0
+
+    all_findings: List[LintFinding] = source_passes.lint_hot_path_asserts()
+    configs = [(w, b, int(s))
+               for w in args.workloads.split(",")
+               for b in args.backends.split(",")
+               for s in args.shards.split(",")]
+    for w, b, s in configs:
+        findings = lint_config(w, b, s, args.scale_items,
+                               args.scale_customers)
+        errs = errors_in(findings)
+        rest = [f for f in findings if f.severity != "error"]
+        tag = "FAIL" if errs else "ok"
+        print(f"[{tag:>4}] {w}/{b}/shards={s or 'off'} — "
+              f"{len(errs)} error(s), {len(rest)} note(s)")
+        all_findings += findings
+
+    errs = errors_in(all_findings)
+    shown = all_findings if args.verbose else errs
+    if shown:
+        print()
+        print(format_findings(shown))
+    print(f"\nplanlint: {len(configs)} configs, "
+          f"{len(errs)} error finding(s)")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

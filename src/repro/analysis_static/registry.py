@@ -1,0 +1,150 @@
+"""The planlint rule + pass registry.
+
+Rules are declared once, here, so the CLI can print the full table, the
+README rule-id table has one source of truth, and a test can assert the
+mutation corpus covers every family.  Pass modules register their entry
+points with ``register_pass`` at import time; ``lint.py`` drives them
+by family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+FAMILIES = ("ir", "fold", "jaxpr", "kernel", "source")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    family: str
+    summary: str
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def _rule(id: str, family: str, summary: str) -> str:
+    if family not in FAMILIES:
+        raise ValueError(f"unknown family {family!r}")
+    RULES[id] = Rule(id, family, summary)
+    return id
+
+
+# ---- IR rules (always-on: engine construction + every fold commit) ----
+IR_SLOT_OVERLAP = _rule(
+    "ir-slot-overlap", "ir",
+    "template admission slot ranges must be pairwise disjoint")
+IR_SLOT_COVERAGE = _rule(
+    "ir-slot-coverage", "ir",
+    "slot ranges must have positive caps and fit inside qcap "
+    "(a multiple of 32)")
+IR_WORD_WINDOW = _rule(
+    "ir-word-window", "ir",
+    "per-stage word windows, subscriber masks and predicate scatter "
+    "plans must stay in bounds")
+IR_PARTITION_GEOMETRY = _rule(
+    "ir-partition-geometry", "ir",
+    "partition-bucket geometry must cover the table capacity and the "
+    "construction-time measured key skew (bucket_cap >= max_dup)")
+
+# ---- fold rules (begin_fold / extend_plan admission) ------------------
+FOLD_DUPLICATE_TEMPLATE = _rule(
+    "fold-duplicate-template", "fold",
+    "a fold may not register a template name already in the plan")
+FOLD_DUPLICATE_IN_BATCH = _rule(
+    "fold-duplicate-in-batch", "fold",
+    "template names within one fold batch must be distinct")
+FOLD_ZERO_CAP = _rule(
+    "fold-zero-cap", "fold",
+    "every folded template needs a positive slot capacity")
+FOLD_ALIEN_TABLE = _rule(
+    "fold-alien-table", "fold",
+    "folds admit new query shapes, not new tables: every referenced "
+    "table must already be in the catalog")
+FOLD_UNKNOWN_COLUMN = _rule(
+    "fold-unknown-column", "fold",
+    "folded template predicates must bind existing columns")
+FOLD_PLAN_PREFIX = _rule(
+    "fold-plan-prefix", "fold",
+    "the extended plan must keep every existing slot range and node "
+    "position (plan-level prefix stability)")
+FOLD_PREFIX_STABILITY = _rule(
+    "fold-prefix-stability", "fold",
+    "the extended LOWERED plan must be a prefix-stable extension "
+    "(windows widen high-side only, stage order and join access paths "
+    "fixed) or carries cannot migrate")
+FOLD_IN_FLIGHT = _rule(
+    "fold-in-flight", "fold",
+    "only one fold may be in flight per engine")
+FOLD_MIRROR_SET = _rule(
+    "fold-mirror-set", "fold",
+    "a fold under a mesh must not change the mirrored table set")
+
+# ---- jaxpr rules ------------------------------------------------------
+JAXPR_DELTA_COLLECTIVE = _rule(
+    "jaxpr-delta-collective", "jaxpr",
+    "delta beats must contain ZERO collective primitives at every "
+    "shard count (shard-local by construction)")
+JAXPR_RESEED_COLLECTIVE = _rule(
+    "jaxpr-reseed-collective", "jaxpr",
+    "the full/reseed beat's only collective is one all_gather per "
+    "mirrored predicated scan stage, over that stage's per-shard rows")
+JAXPR_DELTA_WIDTH = _rule(
+    "jaxpr-delta-width", "jaxpr",
+    "no full-window compare/probe may be reachable on the delta path "
+    "(steady state pays pane width, never window width)")
+JAXPR_DONATED_ALIAS = _rule(
+    "jaxpr-donated-alias", "jaxpr",
+    "buffers reachable through non-donated aliases (rid carry, staged "
+    "queries/updates) must not be donated — use-after-donate")
+
+# ---- kernel rules (fused mega-kernel static schedule) -----------------
+KERNEL_SCHEDULE_COVERAGE = _rule(
+    "kernel-schedule-coverage", "kernel",
+    "every pane tile / dirty slot / probe slot is owned by exactly one "
+    "schedule row")
+KERNEL_GATHER_BOUNDS = _rule(
+    "kernel-gather-bounds", "kernel",
+    "scalar-prefetch gather indices stay inside their padded extent")
+KERNEL_GRID_LENGTH = _rule(
+    "kernel-grid-length", "kernel",
+    "the pallas grid length equals the schedule length")
+KERNEL_GARBAGE_PARK = _rule(
+    "kernel-garbage-park", "kernel",
+    "non-owning programs park on the garbage tile; every real output "
+    "block has exactly one writer")
+
+# ---- source rules -----------------------------------------------------
+NO_BARE_ASSERT = _rule(
+    "no-bare-assert", "source",
+    "hot-path modules guard with raises, never bare assert "
+    "(stripped under python -O)")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintPass:
+    name: str
+    family: str
+    rules: Tuple[str, ...]
+    fn: Callable
+    summary: str
+
+
+PASSES: Dict[str, LintPass] = {}
+
+
+def register_pass(name: str, family: str, rules: Tuple[str, ...],
+                  summary: str):
+    """Decorator: register a pass entry point under the registry."""
+    def deco(fn):
+        for r in rules:
+            if r not in RULES:
+                raise ValueError(f"pass {name!r} names unknown rule {r!r}")
+        PASSES[name] = LintPass(name, family, tuple(rules), fn, summary)
+        return fn
+    return deco
+
+
+def all_rules() -> List[Rule]:
+    return [RULES[k] for k in sorted(RULES)]

@@ -22,7 +22,10 @@ WORD = 32
 
 
 def mask_width(qcap: int) -> int:
-    assert qcap % WORD == 0, f"query capacity {qcap} not a multiple of 32"
+    if qcap % WORD != 0:
+        raise ValueError(
+            f"[planlint:no-bare-assert] query capacity {qcap} is not "
+            f"a multiple of {WORD}")
     return qcap // WORD
 
 

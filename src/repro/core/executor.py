@@ -210,6 +210,18 @@ class CycleResult:
     backend_ops: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
+#: The shipped donation contract: cycle flavour -> donate_argnums.  The
+#: snapshot (arg 0) rolls forward functionally in place; the delta
+#: flavours additionally donate the carried scan words + key partitions
+#: (arg 1).  The rid carry (arg 2 of the delta-join flavour) is
+#: deliberately NOT donated — its arrays double as the previous beat's
+#: in-flight ``results["_join_rids"]``.  planlint's use-after-donate
+#: pass and the lint CLI verify this spec against the aliasing the
+#: lowering actually emits.
+DONATION_SPEC: Dict[str, tuple] = {
+    "full": (0,), "delta": (0, 1), "delta_join": (0, 1)}
+
+
 @dataclasses.dataclass
 class _CompiledHandle:
     """One fully-built compiled-cycle generation.
@@ -231,6 +243,11 @@ class _CompiledHandle:
     stage: Any
     carried_joins: tuple
     layout_token: tuple
+    #: the shipped donation contract per cycle flavour (flavour ->
+    #: donate_argnums), recorded so planlint's use-after-donate pass and
+    #: the lint CLI verify the REAL spec instead of a hardcoded copy;
+    #: empty when the engine runs unjitted
+    donation: Dict[str, tuple] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -354,6 +371,11 @@ class SharedDBEngine:
         background fold thread can run it while the installed generation
         keeps beating."""
         lowered = lower_plan(plan, key_stats=self._key_stats)
+        # always-on planlint: the cheap IR passes gate EVERY generation
+        # (cold start and every background fold build) before anything
+        # compiles against its layout
+        from repro.analysis_static.ir_passes import run_construction_passes
+        run_construction_passes(lowered, key_stats=self._key_stats)
         # per-flavour backend-op launch counters
         # (CycleResult.backend_ops): each cycle flavour traces through
         # its own counting wrapper and clears its dict at traced-function
@@ -396,10 +418,13 @@ class SharedDBEngine:
         # alias it).  The rid carry (arg 2 of the delta-join cycle) is
         # deliberately NOT donated: its arrays double as the previous
         # heartbeat's in-flight ``results["_join_rids"]``.
+        donation: Dict[str, tuple] = {}
         if self._jit:
-            cycle = jax.jit(cycle, donate_argnums=(0,))
-            delta = jax.jit(delta, donate_argnums=(0, 1))
-            delta_j = jax.jit(delta_j, donate_argnums=(0, 1))
+            donation = dict(DONATION_SPEC)
+            cycle = jax.jit(cycle, donate_argnums=donation["full"])
+            delta = jax.jit(delta, donate_argnums=donation["delta"])
+            delta_j = jax.jit(delta_j,
+                              donate_argnums=donation["delta_join"])
         # the admission layout this generation's carries live under: a
         # delta heartbeat must never consume a carry whose slot layout
         # differs (word windows, offsets and packed depth all bake into
@@ -417,7 +442,7 @@ class SharedDBEngine:
             # join stages with carried rid state (non-gather paths)
             carried_joins=tuple(j for j in lowered.joins
                                 if j.kind != "gather"),
-            layout_token=layout_token)
+            layout_token=layout_token, donation=donation)
 
     def _install_handle(self, h: _CompiledHandle) -> None:
         """Atomically swap the serving generation (a beat boundary)."""
@@ -456,9 +481,9 @@ class SharedDBEngine:
         from repro.runtime.elastic import relower_recipe
         if self._fold is not None:
             raise RuntimeError(
-                "a fold is already in flight — wait for it to commit "
-                "before starting another (serving front ends batch "
-                "registrations instead)")
+                "[planlint:fold-in-flight] a fold is already in flight "
+                "— wait for it to commit before starting another "
+                "(serving front ends batch registrations instead)")
         new_templates = list(new_templates)
         new_plan = folding.extend_plan(self.plan, new_templates,
                                        dict(new_caps))

@@ -67,28 +67,17 @@ def extend_plan(plan: CompiledPlan, new_templates: List[QueryTemplate],
     templates may only reference tables the catalog already holds —
     folding registers QUERY shapes, not schema changes, so the table
     snapshots never migrate.
-    """
-    for t in new_templates:
-        if t.name in plan.templates:
-            raise FoldError(f"template {t.name!r} already in the plan")
-        if t.name not in new_caps or new_caps[t.name] < 1:
-            raise FoldError(f"template {t.name!r} needs a positive cap")
-        for table in t.tables():
-            if table not in plan.catalog.schemas:
-                raise FoldError(
-                    f"template {t.name!r} references unknown table "
-                    f"{table!r} — folding admits new query shapes, not "
-                    "new tables")
-        for p in t.preds:
-            if p.table not in plan.catalog.schemas or \
-                    p.col not in plan.catalog.schemas[p.table].columns:
-                raise FoldError(
-                    f"template {t.name!r} predicate on unknown column "
-                    f"{p.table}.{p.col}")
-    names = {t.name for t in new_templates}
-    if len(names) != len(new_templates):
-        raise FoldError("duplicate template names in the fold batch")
 
+    Admission and prefix stability are both proven by planlint passes
+    (``analysis_static.ir_passes``) — the same passes the lint CLI and
+    the mutation corpus exercise — and rejected with the offending rule
+    id in the ``FoldError`` message.
+    """
+    from repro.analysis_static.diagnostics import raise_on_error
+    from repro.analysis_static.ir_passes import (lint_fold_batch,
+                                                 lint_plan_prefix)
+    raise_on_error(lint_fold_batch(plan, new_templates, new_caps),
+                   exc=FoldError)
     merged = list(plan.templates.values()) + list(new_templates)
     caps = dict(plan.caps)
     caps.update({t.name: int(new_caps[t.name]) for t in new_templates})
@@ -96,40 +85,17 @@ def extend_plan(plan: CompiledPlan, new_templates: List[QueryTemplate],
                             max_results=plan.max_results,
                             union_cap=plan.union_cap,
                             group_union_cap=plan.group_union_cap)
-    _check_plan_prefix(plan, extended)
+    raise_on_error(lint_plan_prefix(plan, extended), exc=FoldError)
     return extended
 
 
 def _check_plan_prefix(old: CompiledPlan, new: CompiledPlan) -> None:
-    """Prefix-stability at the PLAN level (the IR level is re-checked by
+    """Prefix-stability at the PLAN level — kept as a thin wrapper over
+    the planlint pass (the IR level is re-checked by
     ``lowering.check_extension_prefix`` after the extended plan lowers)."""
-    for name in old.templates:
-        if new.offsets.get(name) != old.offsets[name] or \
-                new.caps.get(name) != old.caps[name]:
-            raise FoldError(
-                f"slot range of existing template {name!r} moved "
-                f"({old.offsets[name]}+{old.caps[name]} -> "
-                f"{new.offsets.get(name)}+{new.caps.get(name)})")
-    if new.qcap < old.qcap:
-        raise FoldError(f"qcap shrank ({old.qcap} -> {new.qcap})")
-    old_scan_keys = list(old.scans)
-    if list(new.scans)[:len(old_scan_keys)] != old_scan_keys:
-        raise FoldError("scan node order changed")
-    for table in old_scan_keys:
-        oc, nc = old.scans[table].cols, new.scans[table].cols
-        if tuple(nc[:len(oc)]) != tuple(oc):
-            raise FoldError(f"scan {table!r} columns reordered")
-    ok = [(j.spine, j.fk_col, j.pk_table) for j in old.joins]
-    if [(j.spine, j.fk_col, j.pk_table)
-            for j in new.joins[:len(ok)]] != ok:
-        raise FoldError("join node order changed")
-    osk = [(s.spine, s.col, s.desc) for s in old.sorts]
-    if [(s.spine, s.col, s.desc) for s in new.sorts[:len(osk)]] != osk:
-        raise FoldError("sort node order changed")
-    ogk = [(g.spine, g.agg.group_col, g.agg.agg_col) for g in old.groups]
-    if [(g.spine, g.agg.group_col, g.agg.agg_col)
-            for g in new.groups[:len(ogk)]] != ogk:
-        raise FoldError("group node order changed")
+    from repro.analysis_static.diagnostics import raise_on_error
+    from repro.analysis_static.ir_passes import lint_plan_prefix
+    raise_on_error(lint_plan_prefix(old, new), exc=FoldError)
 
 
 def migrate_carry(old: LoweredPlan, new: LoweredPlan, carry,

@@ -399,49 +399,14 @@ def check_extension_prefix(old: LoweredPlan, new: LoweredPlan) -> None:
     their position, scan windows only widen on the high side (new
     templates own higher slot ranges), predicated column lists only
     append, and join stages keep their access path (same catalog + same
-    key stats).  This function turns each of those derivations into a
-    hard check so a fold can never silently migrate a carry into a
-    reordered layout.
+    key stats).  The actual derivation checks live in the planlint pass
+    ``analysis_static.ir_passes.lint_extension_prefix`` (rule
+    ``fold-prefix-stability``) — this entry point is kept so folding and
+    tests keep one import path, and raises ``ValueError`` as before.
     """
-    def fail(what):
-        raise ValueError(
-            f"plan extension is not prefix-stable: {what} — the fold "
-            "cannot migrate carries into this layout")
-
-    if new.qcap < old.qcap or new.n_params_max < old.n_params_max:
-        fail(f"global capacity shrank (qcap {old.qcap}->{new.qcap}, "
-             f"P_max {old.n_params_max}->{new.n_params_max})")
-    if len(new.scans) < len(old.scans):
-        fail("scan stage list shrank")
-    for os, ns in zip(old.scans, new.scans):
-        if ns.table != os.table:
-            fail(f"scan stage order changed ({os.table} -> {ns.table})")
-        if ns.wlo != os.wlo or ns.whi < os.whi:
-            fail(f"scan window of {os.table} moved "
-                 f"([{os.wlo},{os.whi}) -> [{ns.wlo},{ns.whi}))")
-        if tuple(ns.cols[:len(os.cols)]) != tuple(os.cols):
-            fail(f"predicated columns of {os.table} reordered "
-                 f"({os.cols} -> {ns.cols})")
-    if [j.key for j in new.joins[:len(old.joins)]] != \
-            [j.key for j in old.joins]:
-        fail("join stage order changed")
-    for oj, nj in zip(old.joins, new.joins):
-        if (nj.kind, nj.n_partitions, nj.bucket_cap) != \
-                (oj.kind, oj.n_partitions, oj.bucket_cap):
-            fail(f"join {oj.key} access path changed "
-                 f"({oj.kind} -> {nj.kind})")
-    old_sorts = [(s.spine, s.col, s.desc) for s in old.sorts]
-    if [(s.spine, s.col, s.desc) for s in new.sorts[:len(old_sorts)]] \
-            != old_sorts:
-        fail("sort stage order changed")
-    old_groups = [(g.spine, g.agg.group_col, g.agg.agg_col)
-                  for g in old.groups]
-    if [(g.spine, g.agg.group_col, g.agg.agg_col)
-            for g in new.groups[:len(old_groups)]] != old_groups:
-        fail("group stage order changed")
-    if [r.spine for r in new.routes[:len(old.routes)]] != \
-            [r.spine for r in old.routes]:
-        fail("route stage order changed")
+    from repro.analysis_static.diagnostics import raise_on_error
+    from repro.analysis_static.ir_passes import lint_extension_prefix
+    raise_on_error(lint_extension_prefix(old, new), exc=ValueError)
 
 
 # ---------------------------------------------------------------------------

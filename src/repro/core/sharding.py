@@ -182,15 +182,16 @@ def check_fold_mirrors(old_plan: CompiledPlan,
     new tables), so padded capacities never move; this check closes the
     remaining degree of freedom.  Folds that only subscribe to existing
     joins, or add joins into already-mirrored PK tables, pass.
+
+    The mirror-set comparison itself is the planlint pass
+    ``analysis_static.ir_passes.lint_fold_mirrors`` (rule
+    ``fold-mirror-set``); this entry point raises ``ValueError`` as
+    before.
     """
-    old_m = {j.pk_table for j in old_plan.joins}
-    new_m = {j.pk_table for j in new_plan.joins}
-    if old_m != new_m:
-        raise ValueError(
-            "fold under a mesh would change the mirrored table set "
-            f"({sorted(old_m ^ new_m)}) — the sharded state layout is "
-            "fixed at startup; register templates whose joins target "
-            "already-mirrored PK tables, or restart to re-shard")
+    from repro.analysis_static.diagnostics import raise_on_error
+    from repro.analysis_static.ir_passes import lint_fold_mirrors
+    raise_on_error(lint_fold_mirrors(old_plan, new_plan),
+                   exc=ValueError)
 
 
 # ---------------------------------------------------------------------------

@@ -71,7 +71,10 @@ def empty_table(schema: TableSchema) -> Dict:
 def bulk_load(schema: TableSchema, data: Dict[str, jnp.ndarray]) -> Dict:
     """Load host arrays (all the same length) into a fresh table."""
     n = len(next(iter(data.values())))
-    assert n <= schema.capacity, f"{schema.name}: {n} > {schema.capacity}"
+    if n > schema.capacity:
+        raise ValueError(
+            f"[planlint:no-bare-assert] bulk_load of {schema.name}: "
+            f"{n} rows exceed capacity {schema.capacity}")
     t = empty_table(schema)
     for c in schema.columns:
         col = jnp.asarray(data[c], jnp.int32)
@@ -156,7 +159,10 @@ def build_key_partitions(keys, valid, n_partitions: int, bucket_cap: int):
     """
     T = keys.shape[0]
     cap = n_partitions * bucket_cap
-    assert cap >= T, f"partition capacity {cap} < table capacity {T}"
+    if cap < T:
+        raise ValueError(
+            f"[planlint:no-bare-assert] partition capacity {cap} < "
+            f"table capacity {T}")
     invalid = ~valid
     order = jnp.lexsort((jnp.arange(T, dtype=jnp.int32), keys,
                          invalid.astype(jnp.int32)))

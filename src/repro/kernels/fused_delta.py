@@ -53,6 +53,7 @@ as the chained fallback surface (``OperatorBackend.scan_delta`` /
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +66,135 @@ from repro.core.storage import scatter_dirty_rows
 PANE_TILE = 256
 
 _PANE, _DIRTY, _PROBE = 0, 1, 2
+
+
+class ScanGeom(NamedTuple):
+    """Static geometry of one predicated scan stage in the fused grid."""
+    C: int        # predicated columns
+    Q: int        # full window width (slots)
+    A: int        # admission-pane words
+    R: int        # pane tile rows (min(PANE_TILE, T))
+    nt: int       # pane tiles (ceil(T / R)); tile nt is the garbage tile
+    D: int        # dirty-row slots; slot D is the garbage slot
+
+
+class JoinGeom(NamedTuple):
+    """Static geometry of one carried join in the fused grid."""
+    B: int        # bucket pane width
+    D: int        # dirty spine-row slots; slot D is the garbage slot
+    P: int        # bucket count (1 for block pseudo-partitions)
+
+
+def scan_geometry(e) -> ScanGeom:
+    """Geometry from a ``FusedScanIn``'s static shapes."""
+    C, T = e.cols.shape
+    R = min(PANE_TILE, T)
+    return ScanGeom(C=C, Q=e.lo.shape[1], A=e.lo_p.shape[1] // 32,
+                    R=R, nt=-(-T // R), D=e.rows.shape[0])
+
+
+def join_geometry(e) -> JoinGeom:
+    """Geometry from a ``FusedJoinIn``'s static shapes."""
+    P, B = e.bkeys.shape
+    return JoinGeom(B=B, D=e.rows.shape[0], P=P)
+
+
+def build_schedule(sgeom, jgeom) -> np.ndarray:
+    """The STATIC third of the work descriptor: int32[N, 3] rows of
+    (kind, owner, idx) — one pane tile / dirty slot / probe slot per
+    grid program, in stage order.  Pure geometry, no runtime data: this
+    is the schedule ``analysis_static.kernel_passes`` validates (every
+    extent covered exactly once, grid length == schedule length)."""
+    rows = []
+    for s, g in enumerate(sgeom):
+        rows += [(_PANE, s, t) for t in range(g.nt)]
+        rows += [(_DIRTY, s, d) for d in range(g.D)]
+    for j, g in enumerate(jgeom):
+        rows += [(_PROBE, j, d) for d in range(g.D)]
+    return np.asarray(rows, np.int32).reshape(len(rows), 3)
+
+
+def build_sdesc(schedule, sgeom, jgeom, scan_rows, probe_buckets):
+    """Assemble the full scalar-prefetch descriptor int32[N, 4] =
+    (kind, owner, idx, gather) by appending the runtime gather column:
+    clamped dirty-row ids for DIRTY rows (the BlockSpec index_map DMAs
+    exactly that column), routed bucket indices for PROBE rows, zeros
+    for PANE rows (unused)."""
+    gathers = []
+    for g, rows in zip(sgeom, scan_rows):
+        gathers.append(jnp.zeros((g.nt,), jnp.int32))
+        gathers.append(jnp.clip(rows, 0, g.nt * g.R - 1)
+                       .astype(jnp.int32))
+    gathers += [b.astype(jnp.int32) for b in probe_buckets]
+    gather = jnp.concatenate(gathers) if gathers else \
+        jnp.zeros((0,), jnp.int32)
+    return jnp.concatenate([jnp.asarray(schedule), gather[:, None]],
+                           axis=1)
+
+
+def _own(d, i, k, o):
+    """Does grid step ``i``'s descriptor row target (kind k, owner o)?"""
+    return (d[i, 0] == k) & (d[i, 1] == o)
+
+
+def make_in_specs(sgeom, jgeom):
+    """Input BlockSpecs, in the kernel's ref order: 8 per scan stage
+    (cols x2, valid x2, lo/hi, lo_p/hi_p), 3 per join (kd, bkeys,
+    brows).  Owners address their real block; non-owners re-read block
+    0 (harmless — inputs have no write hazard)."""
+    specs = []
+    for s, g in enumerate(sgeom):
+        C, Q, A, R = g.C, g.Q, g.A, g.R
+        specs += [
+            pl.BlockSpec((C, R), lambda i, d, s=s: (
+                0, jnp.where(_own(d, i, _PANE, s), d[i, 2], 0))),
+            pl.BlockSpec((C, 1), lambda i, d, s=s: (
+                0, jnp.where(_own(d, i, _DIRTY, s), d[i, 3], 0))),
+            pl.BlockSpec((R,), lambda i, d, s=s: (
+                jnp.where(_own(d, i, _PANE, s), d[i, 2], 0),)),
+            pl.BlockSpec((1,), lambda i, d, s=s: (
+                jnp.where(_own(d, i, _DIRTY, s), d[i, 3], 0),)),
+            pl.BlockSpec((C, Q), lambda i, d: (0, 0)),
+            pl.BlockSpec((C, Q), lambda i, d: (0, 0)),
+            pl.BlockSpec((C, 32 * A), lambda i, d: (0, 0)),
+            pl.BlockSpec((C, 32 * A), lambda i, d: (0, 0)),
+        ]
+    for j, g in enumerate(jgeom):
+        B = g.B
+        specs += [
+            pl.BlockSpec((1,), lambda i, d, j=j: (
+                jnp.where(_own(d, i, _PROBE, j), d[i, 2], 0),)),
+            pl.BlockSpec((1, B), lambda i, d, j=j: (
+                jnp.where(_own(d, i, _PROBE, j), d[i, 3], 0), 0)),
+            pl.BlockSpec((1, B), lambda i, d, j=j: (
+                jnp.where(_own(d, i, _PROBE, j), d[i, 3], 0), 0)),
+        ]
+    return specs
+
+
+def make_out_specs(sgeom, jgeom):
+    """Output BlockSpecs + shapes: one spare (garbage) tile / slot past
+    the real extent parks every non-owning program's write window, so
+    each real output block has exactly one writer and no cross-program
+    masking is needed.  ``kernel_passes.lint_garbage_park`` re-evaluates
+    these maps against a concrete descriptor to prove it."""
+    specs, shapes = [], []
+    for s, g in enumerate(sgeom):
+        specs.append(pl.BlockSpec((g.R, g.A), lambda i, d, s=s,
+                                  nt=g.nt: (
+            jnp.where(_own(d, i, _PANE, s), d[i, 2], nt), 0)))
+        shapes.append(
+            jax.ShapeDtypeStruct(((g.nt + 1) * g.R, g.A), jnp.uint32))
+        specs.append(pl.BlockSpec((1, g.Q // 32), lambda i, d, s=s,
+                                  D=g.D: (
+            jnp.where(_own(d, i, _DIRTY, s), d[i, 2], D), 0)))
+        shapes.append(
+            jax.ShapeDtypeStruct((g.D + 1, g.Q // 32), jnp.uint32))
+    for j, g in enumerate(jgeom):
+        specs.append(pl.BlockSpec((1,), lambda i, d, j=j, D=g.D: (
+            jnp.where(_own(d, i, _PROBE, j), d[i, 2], D),)))
+        shapes.append(jax.ShapeDtypeStruct((g.D + 1,), jnp.int32))
+    return specs, shapes
 
 
 def _pack_bits(ok):
@@ -113,7 +243,7 @@ def _mega_kernel(sdesc_ref, *refs, sgeom, jgeom):
             ok &= valid_r[0]
             dwords_out[...] = _pack_bits(ok)
 
-    for j, (_B, _Dj) in enumerate(jgeom):
+    for j, (_B, _Dj, _P) in enumerate(jgeom):
         kd, bkeys, brows = refs[8 * len(sgeom) + 3 * j:
                                 8 * len(sgeom) + 3 * j + 3]
         rid_out = refs[n_in + 2 * len(sgeom) + j]
@@ -132,108 +262,40 @@ def fused_delta_pallas(scan_in, join_in, *, interpret: bool = True):
         return (), ()
 
     # ---- static geometry + padded inputs -------------------------------
-    sgeom, padded = [], []
-    for e in scan_in:
-        C, T = e.cols.shape
-        Q = e.lo.shape[1]
-        A = e.lo_p.shape[1] // 32
-        R = min(PANE_TILE, T)
-        nt = -(-T // R)
-        pad = nt * R - T
+    sgeom = [scan_geometry(e) for e in scan_in]
+    padded = []
+    for g, e in zip(sgeom, scan_in):
+        pad = g.nt * g.R - e.cols.shape[1]
         cols_p = jnp.pad(e.cols, ((0, 0), (0, pad))) if pad else e.cols
         valid_p = jnp.pad(e.valid, (0, pad)) if pad else e.valid
-        D = e.rows.shape[0]
-        sgeom.append((C, Q, A, R, nt, D))
         padded.append((cols_p, valid_p))
-    jgeom, probes = [], []
-    for e in join_in:
-        P, B = e.bkeys.shape
-        Tl = e.keys.shape[0]
-        D = e.rows.shape[0]
+    jgeom = [join_geometry(e) for e in join_in]
+    probes = []
+    for g, e in zip(jgeom, join_in):
         # XLA prologue (shared with the reference probe): gather the
         # dirty rows' keys and route each to its ONE candidate bucket
-        safe = jnp.clip(e.rows, 0, Tl - 1)
+        safe = jnp.clip(e.rows, 0, e.keys.shape[0] - 1)
         kd = e.keys[safe]
         b = jnp.searchsorted(e.bounds, kd,
                              side="right").astype(jnp.int32) - 1
-        b = jnp.clip(b, 0, P - 1)
-        jgeom.append((B, D))
-        probes.append((kd, b))
+        probes.append((kd, jnp.clip(b, 0, g.P - 1)))
 
     # ---- the flat work descriptor (kind, owner, idx, gather) ----------
-    blocks = []
-    for s, ((C, Q, A, R, nt, D), e) in enumerate(zip(sgeom, scan_in)):
-        stat = np.zeros((nt, 4), np.int32)
-        stat[:, 0] = _PANE
-        stat[:, 1] = s
-        stat[:, 2] = np.arange(nt)
-        blocks.append(jnp.asarray(stat))
-        rowc = jnp.clip(e.rows, 0, nt * R - 1).astype(jnp.int32)
-        blocks.append(jnp.stack([
-            jnp.full((D,), _DIRTY, jnp.int32),
-            jnp.full((D,), s, jnp.int32),
-            jnp.arange(D, dtype=jnp.int32), rowc], axis=1))
-    for j, ((B, D), (kd, b)) in enumerate(zip(jgeom, probes)):
-        blocks.append(jnp.stack([
-            jnp.full((D,), _PROBE, jnp.int32),
-            jnp.full((D,), j, jnp.int32),
-            jnp.arange(D, dtype=jnp.int32), b], axis=1))
-    sdesc = jnp.concatenate(blocks, axis=0)
-    N = int(sdesc.shape[0])
+    schedule = build_schedule(sgeom, jgeom)
+    sdesc = build_sdesc(schedule, sgeom, jgeom,
+                        [e.rows for e in scan_in],
+                        [b for _, b in probes])
+    N = int(schedule.shape[0])
 
     # ---- block specs: owners address real blocks, others park ---------
-    def own(d, i, k, o):
-        return (d[i, 0] == k) & (d[i, 1] == o)
-
-    inputs, in_specs = [], []
-    for s, ((C, Q, A, R, nt, D), (cols_p, valid_p)) in enumerate(
-            zip(sgeom, padded)):
-        e = scan_in[s]
+    inputs = []
+    for (cols_p, valid_p), e in zip(padded, scan_in):
         inputs += [cols_p, cols_p, valid_p, valid_p, e.lo, e.hi, e.lo_p,
                    e.hi_p]
-        in_specs += [
-            pl.BlockSpec((C, R), lambda i, d, s=s, nt=nt: (
-                0, jnp.where(own(d, i, _PANE, s), d[i, 2], 0))),
-            pl.BlockSpec((C, 1), lambda i, d, s=s: (
-                0, jnp.where(own(d, i, _DIRTY, s), d[i, 3], 0))),
-            pl.BlockSpec((R,), lambda i, d, s=s: (
-                jnp.where(own(d, i, _PANE, s), d[i, 2], 0),)),
-            pl.BlockSpec((1,), lambda i, d, s=s: (
-                jnp.where(own(d, i, _DIRTY, s), d[i, 3], 0),)),
-            pl.BlockSpec((C, Q), lambda i, d: (0, 0)),
-            pl.BlockSpec((C, Q), lambda i, d: (0, 0)),
-            pl.BlockSpec((C, 32 * A), lambda i, d: (0, 0)),
-            pl.BlockSpec((C, 32 * A), lambda i, d: (0, 0)),
-        ]
-    for j, ((B, D), (kd, b)) in enumerate(zip(jgeom, probes)):
-        e = join_in[j]
+    for (kd, b), e in zip(probes, join_in):
         inputs += [kd, e.bkeys, e.brows]
-        in_specs += [
-            pl.BlockSpec((1,), lambda i, d, j=j: (
-                jnp.where(own(d, i, _PROBE, j), d[i, 2], 0),)),
-            pl.BlockSpec((1, B), lambda i, d, j=j: (
-                jnp.where(own(d, i, _PROBE, j), d[i, 3], 0), 0)),
-            pl.BlockSpec((1, B), lambda i, d, j=j: (
-                jnp.where(own(d, i, _PROBE, j), d[i, 3], 0), 0)),
-        ]
-
-    out_specs, out_shapes = [], []
-    for s, (C, Q, A, R, nt, D) in enumerate(sgeom):
-        # one spare (garbage) tile / slot past the real extent parks
-        # every non-owning program's write window
-        out_specs.append(pl.BlockSpec((R, A), lambda i, d, s=s, nt=nt: (
-            jnp.where(own(d, i, _PANE, s), d[i, 2], nt), 0)))
-        out_shapes.append(
-            jax.ShapeDtypeStruct(((nt + 1) * R, A), jnp.uint32))
-        out_specs.append(pl.BlockSpec((1, Q // 32), lambda i, d, s=s,
-                                      D=D: (
-            jnp.where(own(d, i, _DIRTY, s), d[i, 2], D), 0)))
-        out_shapes.append(
-            jax.ShapeDtypeStruct((D + 1, Q // 32), jnp.uint32))
-    for j, (B, D) in enumerate(jgeom):
-        out_specs.append(pl.BlockSpec((1,), lambda i, d, j=j, D=D: (
-            jnp.where(own(d, i, _PROBE, j), d[i, 2], D),)))
-        out_shapes.append(jax.ShapeDtypeStruct((D + 1,), jnp.int32))
+    in_specs = make_in_specs(sgeom, jgeom)
+    out_specs, out_shapes = make_out_specs(sgeom, jgeom)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1, grid=(N,), in_specs=in_specs,
@@ -257,7 +319,7 @@ def fused_delta_pallas(scan_in, join_in, *, interpret: bool = True):
         words.append(scatter_dirty_rows(m, e.rows, outs[2 * s + 1][:D],
                                         T))
     rids = []
-    for j, ((B, D), e) in enumerate(zip(jgeom, join_in)):
+    for j, ((B, D, _P), e) in enumerate(zip(jgeom, join_in)):
         rid_d = outs[2 * len(sgeom) + j][:D]
         rids.append(scatter_dirty_rows(e.rid_carry, e.rows, rid_d,
                                        e.keys.shape[0]))
@@ -291,7 +353,9 @@ def delta_scan_pallas(cols, lo, hi, valid, rows, *, interpret: bool = True):
     C, T = cols.shape
     Q = lo.shape[1]
     D = rows.shape[0]
-    assert Q % 32 == 0
+    if Q % 32:
+        raise ValueError(
+            f"delta scan window width {Q} is not a multiple of 32")
     W = Q // 32
     kernel = functools.partial(_delta_scan_kernel, n_cols=C, qcap=Q)
 

@@ -1,0 +1,20 @@
+"""Seeded-mutation corpus for planlint (tests/test_planlint.py).
+
+Each module plants ONE class of bug the static verifier must catch:
+``EXPECT`` names the rule id that must fire, and ``findings(ctx)``
+builds the mutated artifact and runs the relevant pass against it.
+``ctx`` is the shared fixture dict built once per test session (plan,
+key_stats, lowered IR, and — for the sharded mutations — a 2-shard
+traced cycle setup).  A mutation that stops producing its rule id means
+the verifier regressed, not the corpus.
+"""
+
+CORPUS = (
+    "overlapping_slots",
+    "smuggled_all_gather",
+    "aliased_donated_carry",
+    "off_by_one_schedule",
+    "oob_gather",
+    "double_writer",
+    "full_width_compare",
+)

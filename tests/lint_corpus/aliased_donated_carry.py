@@ -1,0 +1,18 @@
+"""Mutation: the rid carry gets donated.
+
+The rid carry's arrays double as the previous heartbeat's in-flight
+``results["_join_rids"]`` — donating them frees buffers the collector
+is still reading (the bug class PR 4 fixed).  The use-after-donate
+checker must flag a donation spec that includes argument 2 of the
+delta-join flavour.
+"""
+EXPECT = "jaxpr-donated-alias"
+
+
+def findings(ctx):
+    from repro.analysis_static.jaxpr_passes import lint_donation
+    tr = ctx["traced"]()
+    return lint_donation(
+        tr["delta_j"], tr["args_dj"], (0, 1, 2),
+        {2: "rid carry (aliases the previous beat's in-flight results)"},
+        location="mutant delta_join")

@@ -1,0 +1,30 @@
+"""Mutation: two grid programs own the same pane tile.
+
+Duplicating a pane tile index in the descriptor makes the shipped
+output index maps route two programs' writes to one real block — a
+device-order-dependent race.  The garbage-park pass (which evaluates
+the REAL ``make_out_specs`` index maps against the descriptor) must
+report a multi-writer block.
+"""
+EXPECT = "kernel-garbage-park"
+
+
+def findings(ctx):
+    import numpy as np
+
+    from repro.analysis_static.kernel_passes import (lint_garbage_park,
+                                                     synthesize_sdesc)
+    from repro.kernels.fused_delta import _PANE
+    sgeom, jgeom = ctx["geometry"]()
+    sdesc = np.array(synthesize_sdesc(sgeom, jgeom))
+    panes = np.flatnonzero(sdesc[:, 0] == _PANE)
+    first = next(o for o in range(len(sgeom))
+                 if (sdesc[panes, 1] == o).sum() >= 2 or len(sgeom) == 1)
+    mine = panes[sdesc[panes, 1] == first]
+    if len(mine) >= 2:
+        sdesc[mine[1], 2] = sdesc[mine[0], 2]   # both write tile 0
+    else:
+        # single-tile scan: clone the row so two programs own tile 0
+        sdesc = np.vstack([sdesc, sdesc[mine[0]]])
+    return lint_garbage_park(sgeom, jgeom, sdesc,
+                             location="mutant fused")

@@ -1,0 +1,33 @@
+"""Mutation: a full-window range compare reachable on the delta path.
+
+The mutant is the REAL unsharded delta cycle plus one (capacity,
+q_window) ``ge`` over the widest predicated stage — the full-rescan
+work shape a botched pane-slicing refactor would reintroduce.  The
+width classifier must flag it.
+"""
+EXPECT = "jaxpr-delta-width"
+
+
+def findings(ctx):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis_static.jaxpr_passes import lint_delta_width
+
+    tr = ctx["traced"]()
+    lowered, delta = ctx["lowered"], tr["delta"]
+    st = max((s for s in lowered.scans
+              if s.cols and 32 * s.delta_words < s.q_window),
+             key=lambda s: s.q_window)
+    cap = lowered.plan.catalog.schemas[st.table].capacity
+
+    def mutant(state, carry, queries, updates):
+        out = delta(state, carry, queries, updates)
+        col = state[st.table][st.cols[0]]
+        full = col[:, None] >= jnp.zeros((1, st.q_window), col.dtype)
+        return out, full.any()
+
+    jx = jax.make_jaxpr(mutant)(*tr["args_delta"])
+    fs = lint_delta_width(jx, lowered, location="mutant delta")
+    assert cap  # geometry sanity: the stage exists at this scale
+    return fs

@@ -1,0 +1,18 @@
+"""Mutation: the fused kernel's schedule drops its last row.
+
+A truncated schedule leaves one pane tile / probe slot with no owning
+grid program — that block's output is whatever garbage the buffer held.
+Both the coverage rule and the grid-length rule must fire.
+"""
+EXPECT = "kernel-schedule-coverage"
+
+
+def findings(ctx):
+    from repro.analysis_static.kernel_passes import lint_fused_schedule
+    from repro.kernels.fused_delta import build_schedule
+    sgeom, jgeom = ctx["geometry"]()
+    schedule = build_schedule(sgeom, jgeom)
+    truncated = schedule[:-1]
+    return lint_fused_schedule(sgeom, jgeom, truncated,
+                               grid_len=truncated.shape[0],
+                               location="mutant fused")

@@ -1,0 +1,23 @@
+"""Mutation: a dirty-row gather index one past the padded pane extent.
+
+The BlockSpec index map would DMA a block outside the gathered rows
+buffer (or clamp onto the last real tile — someone else's rows).  The
+gather-bounds rule must fire.
+"""
+EXPECT = "kernel-gather-bounds"
+
+
+def findings(ctx):
+    import numpy as np
+
+    from repro.analysis_static.kernel_passes import (lint_gather_bounds,
+                                                     synthesize_sdesc)
+    from repro.kernels.fused_delta import _DIRTY
+    sgeom, jgeom = ctx["geometry"]()
+    sdesc = np.array(synthesize_sdesc(sgeom, jgeom))
+    dirty = np.flatnonzero(sdesc[:, 0] == _DIRTY)
+    row = int(dirty[0])
+    owner = int(sdesc[row, 1])
+    sdesc[row, 3] = sgeom[owner].nt * sgeom[owner].R  # one past the end
+    return lint_gather_bounds(sgeom, jgeom, sdesc,
+                              location="mutant fused")

@@ -138,12 +138,38 @@ def run(mesh, tag):
     print(f"fold differential ok [{tag}]", flush=True)
 
 
+def check_stripped_guards():
+    """The hot-path guards converted from bare asserts (planlint rule
+    ``no-bare-assert``) must still fire with asserts stripped — that is
+    the point of the conversion."""
+    from repro.core.dataquery import mask_width
+    from repro.core.storage import bulk_load
+    schema = tpcw.make_catalog(SCALE_I, SCALE_C).schemas["country"]
+    overflow = {c: np.zeros(schema.capacity + 1, np.int32)
+                for c in schema.columns}
+    try:
+        bulk_load(schema, overflow)
+    except ValueError as e:
+        check("planlint:no-bare-assert" in str(e),
+              f"bulk_load guard lost its rule id: {e}")
+    else:
+        raise SystemExit("bulk_load overflow did not raise under -O")
+    try:
+        mask_width(33)
+    except ValueError:
+        pass
+    else:
+        raise SystemExit("mask_width(33) did not raise under -O")
+    print("stripped-guard probes ok", flush=True)
+
+
 def main():
     if __debug__:
         raise SystemExit("this leg must run under python -O "
                          "(assert statements stripped)")
     from jax.sharding import Mesh
     import jax
+    check_stripped_guards()
     run(None, "unsharded")
     devs = np.array(jax.devices()[:2])
     with_mesh = Mesh(devs, ("rows",))

@@ -1,0 +1,210 @@
+"""planlint acceptance: the static verifier proves the heartbeat
+invariants on shipped configs and catches every seeded mutation.
+
+Three legs:
+
+  * clean-config proofs — the analyzer (the same passes the CLI and the
+    always-on construction gate run) reports ZERO errors on a real
+    sharded config, generalizing tests/test_sharding_locality.py's
+    hand proofs;
+  * seeded-mutation corpus (tests/lint_corpus/) — each planted bug
+    class is caught with its expected rule id;
+  * fold admission — ``extend_plan`` / ``begin_fold`` reject through
+    the planlint passes, with the rule id in the ``FoldError`` /
+    ``RuntimeError`` message.
+"""
+import dataclasses
+import importlib
+
+import numpy as np
+import pytest
+
+import jax
+
+from lint_corpus import CORPUS
+from repro.analysis_static.diagnostics import PlanLintError, errors_in
+from repro.analysis_static.registry import RULES
+from repro.core import backends, folding
+from repro.core.executor import SharedDBEngine, _measure_key_stats
+from repro.core.lowering import build_cycle, build_delta_cycle, lower_plan
+from repro.core.plan import Pred, QueryTemplate
+from repro.core.storage import empty_update_batch
+from repro.workloads import tpcw
+
+SCALE_I, SCALE_C = 64, 128
+
+
+def _struct(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype),
+        tree)
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    """The corpus context: one index-less plan + lazy traced setups."""
+    plan = tpcw.build_tpcw_plan(SCALE_I, SCALE_C, dense_pk_index=False)
+    data = tpcw.generate_data(np.random.default_rng(0), SCALE_I, SCALE_C)
+    key_stats = _measure_key_stats(plan, data)
+    lowered = lower_plan(plan, key_stats=key_stats)
+    slots = tpcw.DEFAULT_UPDATE_SLOTS
+    cache = {}
+
+    def _io():
+        queries = {"params": jax.ShapeDtypeStruct(
+                       (plan.qcap, plan.n_params_max, 2), np.int32),
+                   "active": jax.ShapeDtypeStruct((plan.qcap,), bool)}
+        updates = _struct({t: empty_update_batch(s, slots, xp=np)
+                           for t, s in plan.catalog.schemas.items()})
+        return queries, updates
+
+    def traced():
+        """Unsharded jnp cycles + abstract args (shape-eval only)."""
+        if "traced" not in cache:
+            be = backends.get_backend("jnp")
+            full = build_cycle(lowered, be)
+            delta = build_delta_cycle(lowered, be)
+            delta_j = build_delta_cycle(lowered, be, delta_joins=True)
+            state = _struct(plan.catalog.init_state(data))
+            queries, updates = _io()
+            s2, carry, res = jax.eval_shape(full, state, queries,
+                                            updates)
+            qd = dict(queries,
+                      changed=jax.ShapeDtypeStruct((plan.qcap,), bool))
+            cache["traced"] = {
+                "full": full, "delta": delta, "delta_j": delta_j,
+                "args_full": (state, queries, updates),
+                "args_delta": (s2, carry, qd, updates),
+                "args_dj": (s2, carry, res["_join_rids"], qd, updates)}
+        return cache["traced"]
+
+    def sharded():
+        """2-shard jnp delta cycle + abstract args."""
+        if jax.device_count() < 2:
+            pytest.skip("needs 2 CPU host devices")
+        if "sharded" not in cache:
+            from repro.core.sharding import (build_shard_spec,
+                                             build_sharded_cycle,
+                                             build_sharded_delta_cycle,
+                                             init_sharded_state,
+                                             make_row_mesh)
+            be = backends.get_backend("jnp")
+            spec = build_shard_spec(plan, make_row_mesh(2))
+            full = build_sharded_cycle(lowered, be, spec)
+            delta = build_sharded_delta_cycle(lowered, be, spec)
+            state = _struct(init_sharded_state(spec, data))
+            queries, updates = _io()
+            s2, carry, _ = jax.eval_shape(full, state, queries, updates)
+            qd = dict(queries,
+                      changed=jax.ShapeDtypeStruct((plan.qcap,), bool))
+            cache["sharded"] = {
+                "spec": spec, "full": full, "delta": delta,
+                "args_delta": (s2, carry, qd, updates)}
+        return cache["sharded"]
+
+    def geometry():
+        from repro.analysis_static.kernel_passes import \
+            geometry_from_lowered
+        return geometry_from_lowered(lowered)
+
+    return {"plan": plan, "data": data, "key_stats": key_stats,
+            "lowered": lowered, "slots": slots, "traced": traced,
+            "sharded": sharded, "geometry": geometry}
+
+
+# ---------------------------------------------------------------------------
+# Clean-config proofs
+# ---------------------------------------------------------------------------
+
+
+def test_construction_passes_clean_on_shipped_plans(ctx):
+    from repro.analysis_static.ir_passes import run_construction_passes
+    assert run_construction_passes(ctx["lowered"],
+                                   ctx["key_stats"]) is not None
+    dense = lower_plan(tpcw.build_tpcw_plan(SCALE_I, SCALE_C))
+    assert run_construction_passes(dense) is not None
+
+
+def test_construction_passes_reject_corrupt_layout(ctx):
+    """The always-on gate: a lowered plan whose admission layout is
+    corrupt raises PlanLintError with the rule id, before anything
+    compiles against it."""
+    plan = ctx["plan"]
+    names = sorted(plan.offsets, key=plan.offsets.get)
+    offsets = dict(plan.offsets)
+    offsets[names[1]] = plan.offsets[names[0]]
+    bad = dataclasses.replace(ctx["lowered"],
+                              plan=dataclasses.replace(plan,
+                                                       offsets=offsets))
+    from repro.analysis_static.ir_passes import run_construction_passes
+    with pytest.raises(PlanLintError, match="ir-slot-overlap"):
+        run_construction_passes(bad, ctx["key_stats"])
+
+
+def test_kernel_passes_clean_on_shipped_geometry(ctx):
+    from repro.analysis_static.kernel_passes import run_kernel_passes
+    assert errors_in(run_kernel_passes(ctx["lowered"])) == []
+
+
+def test_analyzer_proves_sharded_config_clean():
+    """One full analyzer cell (the CI planlint job sweeps both backends
+    at shards {1,2,4}): zero collectives on both delta flavours, reseed
+    all_gathers one per mirrored stage, no full-window compare on the
+    delta path, donation contract clean."""
+    if jax.device_count() < 2:
+        pytest.skip("needs 2 CPU host devices")
+    from repro.analysis_static.lint import lint_config
+    findings = lint_config("tpcw-nopk", "jnp", 2, SCALE_I, SCALE_C)
+    assert errors_in(findings) == [], errors_in(findings)
+
+
+# ---------------------------------------------------------------------------
+# Seeded-mutation corpus
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", CORPUS)
+def test_corpus_mutation_caught(ctx, name):
+    mod = importlib.import_module(f"lint_corpus.{name}")
+    assert mod.EXPECT in RULES, f"{name}: EXPECT names unknown rule"
+    errs = errors_in(mod.findings(ctx))
+    assert errs, f"{name}: mutation produced no error findings"
+    got = {f.rule for f in errs}
+    assert mod.EXPECT in got, (name, mod.EXPECT, got)
+
+
+# ---------------------------------------------------------------------------
+# Fold admission through planlint
+# ---------------------------------------------------------------------------
+
+
+def _new_template(name="zz_lint_new"):
+    return QueryTemplate(name, "item",
+                         preds=(Pred("item", "i_id"),), limit=1)
+
+
+def test_fold_errors_carry_rule_ids(ctx):
+    plan = ctx["plan"]
+    dup = next(iter(plan.templates.values()))
+    with pytest.raises(folding.FoldError,
+                       match="fold-duplicate-template"):
+        folding.extend_plan(plan, [dup], {dup.name: 4})
+    new = _new_template()
+    with pytest.raises(folding.FoldError, match="fold-zero-cap"):
+        folding.extend_plan(plan, [new], {new.name: 0})
+    alien = QueryTemplate("zz_alien", "no_such_table",
+                          preds=(Pred("no_such_table", "x"),), limit=1)
+    with pytest.raises(folding.FoldError, match="fold-alien-table"):
+        folding.extend_plan(plan, [alien], {"zz_alien": 4})
+    with pytest.raises(folding.FoldError,
+                       match="fold-duplicate-in-batch"):
+        folding.extend_plan(plan, [new, _new_template()], {new.name: 4})
+
+
+def test_begin_fold_in_flight_rule_id(ctx):
+    eng = SharedDBEngine(ctx["plan"], ctx["slots"], ctx["data"],
+                         jit=False)
+    eng.begin_fold([_new_template("zz_fold_a")], {"zz_fold_a": 4},
+                   background=True)
+    with pytest.raises(RuntimeError, match="planlint:fold-in-flight"):
+        eng.begin_fold([_new_template("zz_fold_b")], {"zz_fold_b": 4})

@@ -24,9 +24,11 @@ import numpy as np
 import pytest
 
 import jax
-import jax.core as jcore
-import jax.numpy as jnp
 
+from repro.analysis_static.diagnostics import errors_in
+from repro.analysis_static.jaxpr_passes import (lint_delta_collectives,
+                                                lint_delta_hlo,
+                                                lint_reseed_collectives)
 from repro.core import backends
 from repro.core.executor import SharedDBEngine
 from repro.core.lowering import lower_plan
@@ -34,32 +36,6 @@ from repro.core.storage import empty_update_batch
 from repro.workloads import tpcw
 
 SCALE_I, SCALE_C = 64, 128
-
-COLLECTIVES = {"all_gather", "psum", "ppermute", "all_to_all", "pgather",
-               "reduce_scatter", "pmax", "pmin", "pargmax", "pargmin",
-               "pbroadcast"}
-HLO_COLLECTIVES = ("all-reduce", "all-gather", "collective-permute",
-                   "all-to-all", "reduce-scatter", "collective-broadcast")
-
-
-def _walk_eqns(closed):
-    """Yield every eqn in a closed jaxpr, recursing into sub-jaxprs
-    (shard_map / scan / cond / pallas_call bodies)."""
-    def walk(jx):
-        for e in jx.eqns:
-            yield e
-            for v in e.params.values():
-                vs = v if isinstance(v, (list, tuple)) else (v,)
-                for w in vs:
-                    if isinstance(w, jcore.ClosedJaxpr):
-                        yield from walk(w.jaxpr)
-                    elif isinstance(w, jcore.Jaxpr):
-                        yield from walk(w)
-    yield from walk(closed.jaxpr)
-
-
-def _collectives(closed):
-    return {e.primitive.name for e in _walk_eqns(closed)} & COLLECTIVES
 
 
 @pytest.fixture(scope="module")
@@ -104,17 +80,17 @@ def sharded_cycles():
 
 def test_delta_beat_executes_no_cross_shard_collective(sharded_cycles):
     """Both delta flavours — shard-local by construction: no collective
-    primitive anywhere in the traced beat, and none in the compiled
-    4-device HLO (GSPMD added none behind our back)."""
+    primitive anywhere in the traced beat (proven by the planlint
+    collective detector), and none in the compiled 4-device HLO (GSPMD
+    added none behind our back)."""
     c = sharded_cycles
     jd = jax.make_jaxpr(c["delta"])(*c["args_delta"])
     jdj = jax.make_jaxpr(c["delta_j"])(*c["args_delta_j"])
-    assert _collectives(jd) == set(), _collectives(jd)
-    assert _collectives(jdj) == set(), _collectives(jdj)
+    assert errors_in(lint_delta_collectives(jd)) == []
+    assert errors_in(lint_delta_collectives(jdj)) == []
     hlo = jax.jit(c["delta_j"]).lower(
         *c["args_delta_j"]).compile().as_text()
-    hits = [t for t in HLO_COLLECTIVES if t in hlo]
-    assert hits == [], hits
+    assert errors_in(lint_delta_hlo(hlo)) == []
 
 
 def test_reseed_beat_allgathers_each_mirrored_stage_exactly_once(
@@ -122,20 +98,16 @@ def test_reseed_beat_allgathers_each_mirrored_stage_exactly_once(
     """The full/reseed beat's only collective is ONE all_gather per
     mirrored predicated scan stage, and each gathers that stage's
     per-shard row slice — i.e. the rescan touched every shard exactly
-    once before re-assembly."""
+    once before re-assembly.  Proven by the planlint reseed analyzer
+    (which checks count AND operand shapes), plus the vacuity guard
+    that this plan has mirrored predicated stages at all."""
     c = sharded_cycles
     spec, lowered = c["spec"], c["lowered"]
-    jf = jax.make_jaxpr(c["full"])(*c["args_full"])
-    assert _collectives(jf) == {"all_gather"}
-    gathers = [e for e in _walk_eqns(jf)
-               if e.primitive.name == "all_gather"]
     mi_pred = [st for st in lowered.scans
                if spec.is_mirrored(st.table) and st.cols]
-    assert len(gathers) == len(mi_pred) > 0
-    got = sorted(e.invars[0].aval.shape for e in gathers)
-    want = sorted((spec.shard_rows[st.table], st.whi - st.wlo)
-                  for st in mi_pred)
-    assert got == want, (got, want)
+    assert mi_pred, "plan has no mirrored predicated stage to prove"
+    jf = jax.make_jaxpr(c["full"])(*c["args_full"])
+    assert errors_in(lint_reseed_collectives(jf, lowered, spec)) == []
     hlo = jax.jit(c["full"]).lower(*c["args_full"]).compile().as_text()
     assert "all-gather" in hlo
 
